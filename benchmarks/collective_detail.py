@@ -1,0 +1,92 @@
+"""Perf-debug tool: compile one scan-unit body and list every collective op
+with its shape/bytes, sorted — the 'profile' for the §Perf hillclimb.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 PYTHONPATH=src \
+        python -m benchmarks.collective_detail --arch mixtral-8x22b \
+        --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, distributed as dist
+from repro.launch import cost as cost_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.launch.hlo import shape_bytes
+from repro.models import transformer as tfm
+from repro.models.param import abstract_params, param_specs
+
+_COLL_LINE = re.compile(
+    r"%\S+ = ([^=]*?)(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)[^\n]*")
+
+
+def list_collectives(hlo: str, top: int = 25):
+    rows = []
+    for m in _COLL_LINE.finditer(hlo):
+        rows.append((shape_bytes(m.group(1)), m.group(2),
+                     m.group(0)[:160]))
+    rows.sort(reverse=True)
+    agg = {}
+    for b, op, _ in rows:
+        agg[op] = agg.get(op, 0) + b
+    return rows[:top], agg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--kind", default=None, choices=[None, "fwd", "grad"])
+    args = ap.parse_args()
+
+    mesh = mesh_lib.make_production_mesh()
+    shape = configs.get_shape(args.shape)
+    cfg = (configs.long_context_config(args.arch)
+           if args.shape == "long_500k" else configs.get_config(args.arch))
+    tp, dp = mesh.shape["model"], mesh.shape["data"]
+    lead, unit, n_rep, tail = tfm.layer_plan(cfg)
+    unit_defs = {f"u{i}": tfm.layer_def(cfg, s, tp, dp)
+                 for i, s in enumerate(unit)}
+    gb, s = shape.global_batch, shape.seq_len
+    with dist.mesh_rules(mesh):
+        bspec = steps_lib.named(mesh, steps_lib.batch_spec(mesh, gb, 2))
+        x_abs = jax.ShapeDtypeStruct((gb, s, cfg.d_model), cfg.compute_dtype)
+
+        def unit_fwd(p, x):
+            for i, sig in enumerate(unit):
+                x, _, _ = tfm.apply_layer(p[f"u{i}"], x, cfg, sig)
+            return x
+
+        def unit_grad(p, x):
+            return jax.grad(lambda p_, x_: jnp.sum(
+                unit_fwd(p_, x_).astype(jnp.float32)),
+                argnums=(0, 1))(p, x)
+
+        fn = unit_fwd if args.kind == "fwd" else unit_grad
+        p_abs = abstract_params(unit_defs)
+        p_sh = jax.tree.map(lambda sp: steps_lib.named(mesh, sp),
+                            param_specs(unit_defs))
+        with cost_lib._direct_attention():
+            compiled = jax.jit(fn, in_shardings=(p_sh, bspec)).lower(
+                p_abs, x_abs).compile()
+    rows, agg = list_collectives(compiled.as_text())
+    print("== aggregate bytes by op (per device, one layer unit) ==")
+    for op, b in sorted(agg.items(), key=lambda kv: -kv[1]):
+        print(f"  {op:22s} {b / 1e9:8.3f} GB")
+    print("== top collectives ==")
+    for b, op, line in rows:
+        print(f"  {b / 1e6:10.1f} MB  {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU (the
+Pallas kernels themselves target TPU; interpret mode timing is meaningless,
+so we time the production jnp paths and report kernel/oracle agreement)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # OTA aggregation at the paper's scale (d = 814,090; N = 10)
+    g = jax.random.normal(key, (10, 814_090))
+    s = jax.random.uniform(key, (10,))
+    z = jax.random.normal(key, (814_090,))
+    ns = jnp.float32(0.2)
+    t_ref = _time(jax.jit(ref.ota_aggregate_ref), g, s, z, ns)
+    out_k = ops.ota_aggregate(g, s, z, ns)
+    err = float(jnp.max(jnp.abs(out_k - ref.ota_aggregate_ref(g, s, z, ns))))
+    rows.append({"bench": "ota_aggregate_d814k", "us_per_call": round(t_ref, 1),
+                 "kernel_max_err": err})
+
+    # blocked attention 2k, window vs full
+    q = jax.random.normal(key, (1, 2048, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2048, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2048, 2, 64), jnp.float32)
+    fn_full = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    rows.append({"bench": "attention_ref_2k_full",
+                 "us_per_call": round(_time(fn_full, q, k, v, iters=3), 1)})
+
+    # SSD scan (model path) vs sequential oracle, S=1024
+    b, s_, h, p, gsz, n = 1, 1024, 8, 64, 1, 64
+    x = jax.random.normal(key, (b, s_, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s_, h)))
+    a_neg = -jnp.exp(jax.random.normal(key, (h,)) * 0.5)
+    bm = jax.random.normal(key, (b, s_, gsz, n)) * 0.3
+    cm = jax.random.normal(key, (b, s_, gsz, n)) * 0.3
+    from repro.models.ssm import ssd_chunked
+    f_chunk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    f_seq = jax.jit(ref.ssd_ref)
+    t_chunk = _time(f_chunk, x, dt, a_neg, bm, cm, iters=3)
+    t_seq = _time(f_seq, x, dt, a_neg, bm, cm, iters=3)
+    err = float(jnp.max(jnp.abs(f_chunk(x, dt, a_neg, bm, cm)
+                                - f_seq(x, dt, a_neg, bm, cm))))
+    rows.append({"bench": "ssd_chunked_1k", "us_per_call": round(t_chunk, 1),
+                 "speedup_vs_sequential": round(t_seq / t_chunk, 2),
+                 "max_err": err})
+    return rows

@@ -1,0 +1,80 @@
+"""Benchmark harness (deliverable d): one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fig2-rounds N] [--skip-fig2]
+
+Emits ``name,us_per_call,derived`` CSV rows per the repo convention, plus a
+human-readable summary.  Roofline rows appear when experiments/dryrun/
+artifacts exist (produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _csv(row: dict) -> str:
+    name = row.pop("bench", None) or row.pop("scheme", None) \
+        or f"{row.pop('arch', '?')}_{row.pop('shape', '')}"
+    us = row.pop("us_per_call", "")
+    derived = ";".join(f"{k}={v}" for k, v in row.items())
+    return f"{name},{us},{derived}"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig2-rounds", type=int, default=150)
+    ap.add_argument("--fig2-every", type=int, default=15)
+    ap.add_argument("--skip-fig2", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    print("bench,us_per_call,derived")
+
+    # --- SCA solver quality/timing (paper §III-B) ---
+    from benchmarks import sca_bench
+    for row in sca_bench.run(num_seeds=3, sizes=(10, 20)):
+        print(_csv(row), flush=True)
+
+    # --- bias-variance trade-off sweep (paper §III-A / Theorem 1) ---
+    for row in sca_bench.tradeoff_sweep():
+        print(_csv(row), flush=True)
+
+    # --- Theorem-1 bound decomposition ---
+    for row in sca_bench.bound_decomposition():
+        print(_csv(row), flush=True)
+
+    # --- kernel micro-benches ---
+    from benchmarks import kernel_bench
+    for row in kernel_bench.run():
+        print(_csv(row), flush=True)
+
+    # --- Fig. 2 reproduction (the paper's main experiment) ---
+    if not args.skip_fig2:
+        from benchmarks import fig2
+        t0 = time.time()
+        hist = fig2.run(num_rounds=args.fig2_rounds,
+                        eval_every=args.fig2_every, seed=args.seed)
+        wall = time.time() - t0
+        for row in fig2.summarize(hist):
+            row["bench"] = "fig2_" + row.pop("scheme")
+            print(_csv(row), flush=True)
+        print(f"# fig2 wall time: {wall:.1f}s", flush=True)
+
+    # --- roofline terms from dry-run artifacts (if present) ---
+    from benchmarks import roofline
+    rows = roofline.run()
+    for row in rows:
+        row["bench"] = f"roofline_{row.pop('arch')}_{row.pop('shape')}"
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "model_flops_per_device"):
+            row[k] = f"{row[k]:.4g}"
+        row["useful_flops_ratio"] = f"{row['useful_flops_ratio']:.3f}"
+        print(_csv(row), flush=True)
+    if not rows:
+        print("# no dryrun artifacts yet — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""SCA power-control benchmarks: solution quality, convergence, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import channel, sca, theory
+from repro.core.theory import OTAParams
+
+
+def make_prm(n: int, seed: int, d: int = 814090) -> OTAParams:
+    wcfg = channel.WirelessConfig(num_devices=n, seed=seed)
+    dep = channel.deploy(wcfg)
+    return OTAParams(d=d, gmax=10.0, es=wcfg.energy_per_sample,
+                     n0=wcfg.noise_psd, gains=dep.gains,
+                     sigma_sq=np.zeros(n), eta=0.05, lsmooth=1.0,
+                     kappa_sq=4.0)
+
+
+def run(num_seeds: int = 5, sizes=(10, 20, 50)) -> list:
+    rows = []
+    for n in sizes:
+        gaps, iters, times, vs_zb = [], [], [], []
+        for seed in range(num_seeds):
+            prm = make_prm(n, seed)
+            t0 = time.time()
+            res = sca.solve_sca(prm)
+            dt = time.time() - t0
+            oracle = sca.solve_direct(prm, num_starts=6, seed=seed)
+            zb = theory.p1_objective(theory.zero_bias_gamma(prm), prm)
+            gaps.append(res.objective / max(oracle.objective, 1e-30) - 1.0)
+            vs_zb.append(res.objective / zb)
+            iters.append(res.iterations)
+            times.append(dt)
+        rows.append({
+            "bench": f"sca_n{n}",
+            "us_per_call": round(np.mean(times) * 1e6, 1),
+            "iters_mean": round(float(np.mean(iters)), 1),
+            "gap_vs_oracle_max": round(float(np.max(gaps)), 5),
+            "objective_vs_zero_bias": round(float(np.mean(vs_zb)), 4),
+        })
+    return rows
+
+
+def tradeoff_sweep(n: int = 10, seed: int = 0, points: int = 9) -> list:
+    """Bias-variance decomposition along gamma = f * gamma_max (paper §III-A
+    discussion): noise falls and bias rises as f grows."""
+    prm = make_prm(n, seed)
+    gm = theory.gamma_max(prm)
+    rows = []
+    for f in np.linspace(0.2, 1.0, points):
+        gamma = f * gm
+        z = theory.zeta_terms(gamma, prm)
+        _, _, p = theory.participation(gamma, prm)
+        rows.append({
+            "bench": f"tradeoff_f{f:.2f}",
+            "noise_var": z["noise"],
+            "tx_var": z["transmission"],
+            "bias": theory.bias_term(p, prm),
+            "objective": theory.p1_objective(gamma, prm),
+        })
+    return rows
+
+
+def bound_decomposition(n: int = 10, seed: int = 0,
+                        rounds=(50, 200, 1000)) -> list:
+    """Theorem-1 bound components for the SCA and zero-bias designs."""
+    prm = make_prm(n, seed)
+    res = sca.solve_sca(prm)
+    rows = []
+    for name, gamma in [("sca", res.gamma),
+                        ("zero_bias", theory.zero_bias_gamma(prm))]:
+        for t in rounds:
+            b = theory.theorem1_bound(gamma, prm, init_gap=5.0, num_rounds=t)
+            rows.append({
+                "bench": f"bound_{name}_T{t}",
+                "optimization": round(b["optimization"], 4),
+                "variance": round(b["variance"], 4),
+                "bias": round(b["bias"], 6),
+                "total": round(b["total"], 4),
+            })
+    return rows

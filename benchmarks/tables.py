@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.tables [--mesh pod|multipod]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import roofline
+
+
+def dryrun_table(records: list) -> str:
+    lines = ["| arch | shape | devices | params | HLO GFLOP/dev | HLO GB/dev "
+             "| coll GB/dev (ar/ag/rs/a2a/cp) | args GB/dev | compile s |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        coll = r["collective_bytes_per_device"]
+        fl = r.get("flops_per_device_corrected", r["flops_per_device"])
+        cl = r.get("collective_bytes_corrected", coll["total"])
+        by = r.get("bytes_per_device_corrected",
+                   r["bytes_accessed_per_device"])
+        detail = "/".join(f"{coll.get(k, 0) / 1e9:.2f}"
+                          for k in ("all-reduce", "all-gather",
+                                    "reduce-scatter", "all-to-all",
+                                    "collective-permute"))
+        arg_gb = r["memory_analysis"].get("argument_bytes", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['devices']} "
+            f"| {r['num_params'] / 1e9:.2f}B | {fl / 1e9:.0f} "
+            f"| {by / 1e9:.1f} | {cl / 1e9:.2f} ({detail}) "
+            f"| {arg_gb:.2f} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records: list) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s "
+             "| dominant | MODEL_FLOPS/dev | useful ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        row = roofline.roofline_row(r)
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['compute_s']:.3f} "
+            f"| {row['memory_s']:.3f} | {row['collective_s']:.3f} "
+            f"| **{row['dominant']}** "
+            f"| {row['model_flops_per_device']:.3e} "
+            f"| {row['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    records = roofline.load_records(f"*_{args.mesh}.json")
+    print(f"### Dry-run ({args.mesh})\n")
+    print(dryrun_table(records))
+    if args.mesh == "pod":
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table(records))
+
+
+if __name__ == "__main__":
+    main()

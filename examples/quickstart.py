@@ -1,0 +1,46 @@
+"""Quickstart: the paper's experiment in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the paper's MLP over a simulated heterogeneous wireless network with
+three OTA power-control schemes and prints the accuracy trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel, power_control as pcm
+from repro.core.theory import OTAParams
+from repro.data import partition, synthetic
+from repro.fl.server import FLRunConfig, run_fl
+from repro.models import mlp
+from repro.models.param import init_params
+
+# 1. wireless world: 10 devices, log-distance path loss, Rayleigh fading
+wcfg = channel.WirelessConfig(num_devices=10, seed=0)
+dep = channel.deploy(wcfg)
+print("device distances (m):", np.round(dep.distances, 0))
+
+# 2. non-iid data: 2 digits per device, <= 2 devices per digit (paper §IV)
+x, y, xt, yt = synthetic.mnist_like(500, seed=0)
+shards = partition.partition_by_label(x, y, 10, seed=0)
+xd, yd = partition.stack_shards(shards)
+
+# 3. problem constants for the Theorem-1-driven power control design
+prm = OTAParams(d=mlp.PARAM_DIM, gmax=10.0, es=wcfg.energy_per_sample,
+                n0=wcfg.noise_psd, gains=dep.gains, sigma_sq=np.zeros(10),
+                eta=0.05, lsmooth=1.0, kappa_sq=4.0)
+
+params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(0))
+xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+
+# 4. run three schemes: noiseless reference, the paper's SCA design, and the
+#    zero-instantaneous-bias baseline constrained by the weakest channel
+for scheme_name in ["ideal", "sca", "vanilla"]:
+    scheme = pcm.make_power_control(scheme_name, dep, prm)
+    run_cfg = FLRunConfig(eta=0.05, num_rounds=60, eval_every=20)
+    _, hist = run_fl(mlp.mlp_loss, params0, scheme, dep.gains, (xd, yd),
+                     run_cfg, eval_fn=lambda p: evals(p))
+    traj = " -> ".join(f"{h['acc']:.3f}" for h in hist)
+    print(f"{scheme_name:8s} acc: {traj}")

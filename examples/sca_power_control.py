@@ -1,0 +1,44 @@
+"""SCA power-control design demo (paper §III-B).
+
+    PYTHONPATH=src python examples/sca_power_control.py
+
+Solves (P1) for a heterogeneous deployment and compares the optimized
+bias-variance trade-off against the zero-bias and max-power designs.
+"""
+import numpy as np
+
+from repro.core import channel, sca, theory
+from repro.core.theory import OTAParams
+
+wcfg = channel.WirelessConfig(num_devices=10, seed=0)
+dep = channel.deploy(wcfg)
+prm = OTAParams(d=814090, gmax=10.0, es=wcfg.energy_per_sample,
+                n0=wcfg.noise_psd, gains=dep.gains, sigma_sq=np.zeros(10),
+                eta=0.05, lsmooth=1.0, kappa_sq=4.0)
+
+res = sca.solve_sca(prm)
+print(f"SCA converged in {res.iterations} iterations")
+print("objective trajectory:", [f"{h:.3f}" for h in res.history])
+
+print(f"\n{'device':>6} {'dist(m)':>8} {'Lambda':>10} {'gamma/gmax':>10} "
+      f"{'p_m':>7}")
+gm = theory.gamma_max(prm)
+for m in range(10):
+    print(f"{m:>6} {dep.distances[m]:>8.0f} {dep.gains[m]:>10.2e} "
+          f"{res.gamma[m] / gm[m]:>10.3f} {res.p[m]:>7.4f}")
+
+print("\ndesign comparison (P1 objective = 2 eta L zeta + bias):")
+designs = {
+    "sca (optimized)": res.gamma,
+    "zero-bias": theory.zero_bias_gamma(prm),
+    "max-power": theory.gamma_max(prm),
+}
+for name, gamma in designs.items():
+    z = theory.zeta_terms(gamma, prm)
+    _, _, p = theory.participation(gamma, prm)
+    b = theory.bias_term(p, prm)
+    print(f"  {name:16s} obj={theory.p1_objective(gamma, prm):8.4f} "
+          f"noise={z['noise']:8.3f} tx_var={z['transmission']:7.3f} "
+          f"bias={b:8.5f}")
+print("\n=> SCA accepts a small structured bias to cut receiver-noise "
+      "variance — the paper's trade-off.")

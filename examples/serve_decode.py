@@ -1,0 +1,11 @@
+"""Serving example: batched prefill + decode for three architecture families
+(dense KV cache, SSM state, hybrid ring cache).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as serve_mod
+
+for arch in ["qwen1.5-0.5b", "mamba2-1.3b", "recurrentgemma-9b"]:
+    print(f"\n=== {arch} ===")
+    serve_mod.main(["--arch", arch, "--smoke", "--batch", "2",
+                    "--prompt-len", "32", "--decode-tokens", "16"])

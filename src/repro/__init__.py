@@ -1,0 +1,6 @@
+"""repro: Non-Convex Over-the-Air Heterogeneous Federated Learning in JAX.
+
+Paper: Abrar & Michelusi, 2025 — biased OTA-FL SGD, bias-variance trade-off,
+SCA power control. See DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,63 @@
+"""Sharded-aware checkpointing: pytree -> npz + structure manifest.
+
+Arrays are gathered to host (fine for the CPU/reduced paths; the full-size
+configs only ever exist abstractly).  Keys are '/'-joined pytree paths, so
+restore round-trips through arbitrary nested dict/list/tuple structures.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: PyTree, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {"keys": sorted(flat), "meta": meta or {}}
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (values ignored)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        if key not in npz:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = npz[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(_manifest_path(path)) as f:
+        return json.load(f)["meta"]

@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Every entry cites its source paper / model card in the module docstring.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+from repro.configs.shapes import SHAPES, InputShape, get_shape  # noqa: F401
+
+_MODULES = {
+    "granite-8b": "repro.configs.granite_8b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "qwen3-1.7b": "repro.configs.qwen3_17b",
+    "mamba2-1.3b": "repro.configs.mamba2_13b",
+    "qwen2.5-14b": "repro.configs.qwen25_14b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch])
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def long_context_ok(arch: str) -> bool:
+    return bool(getattr(_module(arch), "LONG_CONTEXT_OK", False))
+
+
+def long_context_config(arch: str):
+    """Config used for the long_500k shape (may be a sub-quadratic variant)."""
+    mod = _module(arch)
+    cfg = mod.CONFIG
+    variant = getattr(mod, "LONG_CONTEXT_VARIANT", None)
+    return cfg.replace(**variant) if variant else cfg
+
+
+def supported_shapes(arch: str) -> tuple:
+    """Shapes this arch runs, per DESIGN.md §Arch-applicability."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if long_context_ok(arch):
+        names.append("long_500k")
+    return tuple(names)

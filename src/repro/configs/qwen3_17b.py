@@ -1,0 +1,23 @@
+"""qwen3-1.7b — dense with qk_norm, GQA [hf:Qwen/Qwen3-8B family].
+
+28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    ffn_kind="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+LONG_CONTEXT_OK = False

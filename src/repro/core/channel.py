@@ -1,0 +1,130 @@
+"""Wireless channel model for OTA-FL (paper §II).
+
+Flat Rayleigh fading MAC: h_{m,t} ~ CN(0, Lambda_m), i.i.d. over rounds,
+independent across devices.  Lambda_m (average channel gain) follows the
+log-distance path-loss model of §IV:
+
+    PL(dist)[dB] = PL0 + 10 * beta * log10(dist / d0)
+
+with PL0 = 50 dB at d0 = 1 m and path-loss exponent beta = 2.2.
+
+All power-control math is done in float64 numpy (the physical scales are
+~1e-9 .. 1e-21); the training path consumes the resulting dimensionless
+per-round coefficients in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Paper §IV physical constants (defaults; all overridable via WirelessConfig).
+# ---------------------------------------------------------------------------
+DEFAULT_PL0_DB = 50.0          # path loss at reference distance (dB)
+DEFAULT_PL_EXPONENT = 2.2      # path loss exponent
+DEFAULT_R_MAX = 1750.0         # deployment radius (m)
+DEFAULT_BANDWIDTH = 1e6        # B = 1 MHz
+DEFAULT_PTX_DBM = 0.0          # transmit power, 0 dBm
+DEFAULT_N0_DBM_HZ = -173.0     # noise PSD at the PS, -173 dBm/Hz
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) * 1e-3
+
+
+def path_loss_db(dist_m: np.ndarray, pl0_db: float = DEFAULT_PL0_DB,
+                 exponent: float = DEFAULT_PL_EXPONENT) -> np.ndarray:
+    """Log-distance path loss in dB at distance ``dist_m`` meters."""
+    dist_m = np.asarray(dist_m, dtype=np.float64)
+    return pl0_db + 10.0 * exponent * np.log10(np.maximum(dist_m, 1.0))
+
+
+def average_gain(dist_m: np.ndarray, pl0_db: float = DEFAULT_PL0_DB,
+                 exponent: float = DEFAULT_PL_EXPONENT) -> np.ndarray:
+    """Lambda_m: linear average channel power gain."""
+    return 10.0 ** (-path_loss_db(dist_m, pl0_db, exponent) / 10.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """Statistical description of the heterogeneous wireless deployment.
+
+    This is the *statistical CSI* the PS is allowed to know ({Lambda_m});
+    instantaneous CSI {h_{m,t}} is drawn per round and only visible to the
+    owning device (and to baselines that explicitly require global CSI).
+    """
+    num_devices: int = 10
+    r_max: float = DEFAULT_R_MAX
+    pl0_db: float = DEFAULT_PL0_DB
+    pl_exponent: float = DEFAULT_PL_EXPONENT
+    bandwidth_hz: float = DEFAULT_BANDWIDTH
+    ptx_dbm: float = DEFAULT_PTX_DBM
+    n0_dbm_hz: float = DEFAULT_N0_DBM_HZ
+    seed: int = 0
+
+    @property
+    def ptx_watt(self) -> float:
+        return dbm_to_watt(self.ptx_dbm)
+
+    @property
+    def energy_per_sample(self) -> float:
+        """E_s: max per-sample (per-symbol) energy budget = Ptx / B [J]."""
+        return self.ptx_watt / self.bandwidth_hz
+
+    @property
+    def noise_psd(self) -> float:
+        """N0 in W/Hz == J (noise energy per symbol at unit bandwidth)."""
+        return dbm_to_watt(self.n0_dbm_hz)
+
+
+@dataclasses.dataclass(frozen=True)
+class Deployment:
+    """A realized device deployment: distances and average gains."""
+    cfg: WirelessConfig
+    distances: np.ndarray    # [N] meters
+    gains: np.ndarray        # [N] Lambda_m (linear)
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.gains.shape[0])
+
+
+def deploy(cfg: WirelessConfig, distances: Optional[np.ndarray] = None) -> Deployment:
+    """Uniformly deploy ``cfg.num_devices`` devices in a disk of radius r_max.
+
+    Area-uniform: r = r_max * sqrt(U).  Deterministic given cfg.seed.
+    """
+    if distances is None:
+        rng = np.random.default_rng(cfg.seed)
+        u = rng.uniform(size=cfg.num_devices)
+        distances = cfg.r_max * np.sqrt(u)
+        # Keep devices at least 1 m away from the PS (reference distance).
+        distances = np.maximum(distances, 1.0)
+    distances = np.asarray(distances, dtype=np.float64)
+    gains = average_gain(distances, cfg.pl0_db, cfg.pl_exponent)
+    return Deployment(cfg=cfg, distances=distances, gains=gains)
+
+
+def draw_fading(rng: np.random.Generator, gains: np.ndarray,
+                num_rounds: int = 1) -> np.ndarray:
+    """Draw h_{m,t} ~ CN(0, Lambda_m), shape [num_rounds, N] complex128.
+
+    CN(0, L): real/imag each N(0, L/2) so that E|h|^2 = L.
+    """
+    gains = np.asarray(gains, dtype=np.float64)
+    n = gains.shape[0]
+    scale = np.sqrt(gains / 2.0)
+    re = rng.standard_normal((num_rounds, n)) * scale
+    im = rng.standard_normal((num_rounds, n)) * scale
+    return re + 1j * im
+
+
+def fading_magnitude_quantile(gains: np.ndarray, q: float) -> np.ndarray:
+    """q-quantile of |h_m| under Rayleigh fading: |h| ~ Rayleigh(sqrt(L/2)).
+
+    P(|h| <= x) = 1 - exp(-x^2 / L)  =>  x_q = sqrt(-L * ln(1-q)).
+    """
+    gains = np.asarray(gains, dtype=np.float64)
+    return np.sqrt(-gains * np.log1p(-q))

@@ -1,0 +1,107 @@
+"""OTA aggregation operators (paper eqs. (3)-(6)) in JAX.
+
+Two equivalent implementations (tested against each other):
+
+1. ``ota_aggregate`` — stacked form: per-client gradients live on one host
+   with a leading client axis [N, ...].  Used by the FL simulator (the
+   paper-scale N=10 experiments) and as the reference semantics.
+
+2. ``ota_aggregate_shmap`` — shard_map collective: each client owns its
+   gradient shard along a mesh axis; the psum over the client axes IS the
+   wireless superposition (DESIGN.md §3).  Used by the production
+   train_step.
+
+Both consume the per-round coefficients (s, noise_scale) produced by a
+PowerControl scheme, so every baseline (vanilla/OPC/BB-FL/...) rides the
+same operators.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def draw_fading(key: jax.Array, gains: jax.Array) -> jax.Array:
+    """h_m ~ CN(0, Lambda_m): complex [N]."""
+    kr, ki = jax.random.split(key)
+    scale = jnp.sqrt(gains / 2.0)
+    re = jax.random.normal(kr, gains.shape) * scale
+    im = jax.random.normal(ki, gains.shape) * scale
+    return jax.lax.complex(re, im)
+
+
+def add_receiver_noise(tree: PyTree, noise_scale, key: jax.Array) -> PyTree:
+    """g + noise_scale * z per component (z ~ N(0, I))."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [l + (noise_scale * jax.random.normal(k, l.shape)).astype(l.dtype)
+           for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def weighted_sum(stacked: PyTree, s: jax.Array) -> PyTree:
+    """sum_m s_m * g_m over the leading client axis of every leaf."""
+    def one(leaf):
+        w = s.astype(leaf.dtype).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(w * leaf, axis=0)
+    return jax.tree.map(one, stacked)
+
+
+def ota_aggregate(stacked_grads: PyTree, scheme, h: jax.Array,
+                  key: jax.Array) -> PyTree:
+    """Full OTA round on stacked per-client grads [N, ...].
+
+    h: complex fading [N] (the devices' local instantaneous CSI);
+    scheme: a PowerControl; key: receiver-noise randomness.
+    """
+    k_coeff, k_noise = jax.random.split(key)
+    s, noise_scale = scheme.round_coeffs(h, k_coeff)
+    agg = weighted_sum(stacked_grads, s)
+    return add_receiver_noise(agg, noise_scale, k_noise)
+
+
+# ---------------------------------------------------------------------------
+# shard_map collective form
+# ---------------------------------------------------------------------------
+
+def client_index(axis_names: Sequence[str]) -> jax.Array:
+    """Flat client id across the given mesh axes (row-major)."""
+    idx = jnp.zeros((), jnp.int32)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def ota_aggregate_shmap(local_grad: PyTree, s_all: jax.Array, noise_scale,
+                        key: jax.Array, axis_names: Sequence[str]) -> PyTree:
+    """Inside shard_map: each client scales its local gradient by its own
+    coefficient, the psum superposes (the MAC), noise is added identically
+    everywhere (same key => same z, exactly one PS noise draw).
+    """
+    me = client_index(axis_names)
+    s_me = s_all[me]
+    scaled = jax.tree.map(lambda g: g * s_me.astype(g.dtype), local_grad)
+    summed = jax.tree.map(lambda g: jax.lax.psum(g, tuple(axis_names)),
+                          scaled)
+    return add_receiver_noise(summed, noise_scale, key)
+
+
+# ---------------------------------------------------------------------------
+# Weighted-loss helpers (pjit-native formulation; see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def per_client_loss_weights(s: jax.Array) -> jax.Array:
+    """Weights w_m = N * s_m so that mean_m(w_m * f_m) = sum_m s_m f_m.
+
+    Under data-parallel autodiff the gradient of the mean per-client loss is
+    (1/N) sum_m grad f_m; scaling client m's loss by N*s_m makes the native
+    all-reduce compute sum_m s_m grad f_m — the OTA superposition — with no
+    extra collective.
+    """
+    n = s.shape[0]
+    return n * s

@@ -1,0 +1,295 @@
+"""OTA power-control schemes: the paper's SCA design + all Fig.-2 baselines.
+
+Every scheme reduces, per FL round, to a pair of coefficients
+
+    g_hat = sum_m s_m * g_m  +  noise_scale * z,     z ~ N(0, I_d)
+
+where ``s_m`` absorbs the device pre-scaler, the (truncated) channel
+inversion, the transmission indicator chi_{m,t}, and the PS post-scaler; and
+``noise_scale`` is the effective receiver-noise amplitude per gradient
+component.  ``round_coeffs`` is pure jnp so schemes embed directly in a
+jit'd/pjit'd train step.
+
+Schemes (paper §IV):
+  sca               proposed: per-device gamma_m from the SCA solver,
+                    truncated channel inversion, statistical CSI at PS.
+  lcpc              LCPC OTA-Comp [13]: truncated inversion with a COMMON
+                    pre-scaler, grid-optimized with statistical CSI.
+  vanilla           Vanilla OTA-FL [5]: full channel inversion, common scale
+                    set by the weakest instantaneous channel (zero inst. bias,
+                    needs global instantaneous CSI).
+  opc               OPC OTA-Comp [13]: per-round MSE-optimal power control
+                    (threshold structure), needs global instantaneous CSI.
+  bbfl_interior     BB-FL [11]: schedule only devices within R_in.
+  bbfl_alternative  BB-FL [11]: randomly alternate full/interior scheduling.
+  ideal             noiseless FedAvg (upper reference, eq. (2)).
+  zero_bias         structured zero-average-bias truncated inversion
+                    (p_m = 1/N exactly; the 'weakest channel binds' regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sca as sca_mod
+from repro.core import theory
+from repro.core.channel import Deployment
+from repro.core.theory import OTAParams
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PowerControl:
+    """Base: time-invariant design state + per-round coefficient map."""
+    name: str = "base"
+    requires_global_csi: bool = False
+    # Time-invariant design (populated where applicable):
+    gamma: Optional[np.ndarray] = None   # [N] device pre-scalers
+    alpha: Optional[float] = None        # PS post-scaler
+    p: Optional[np.ndarray] = None       # [N] avg participation levels
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        """(s[N], noise_scale) for one round given complex fading h[N]."""
+        raise NotImplementedError
+
+
+def _bmax(prm: OTAParams) -> float:
+    """Max transmit amplitude per unit gradient: sqrt(d Es)/Gmax."""
+    return float(np.sqrt(prm.d * prm.es) / prm.gmax)
+
+
+# ---------------------------------------------------------------------------
+# Truncated-channel-inversion family (time-invariant gamma): SCA / LCPC /
+# zero-bias.  s_m = chi_m gamma_m / alpha,  noise = sqrt(N0)/alpha.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TruncatedInversion(PowerControl):
+    thresholds: Optional[np.ndarray] = None   # [N] chi thresholds on |h|
+    n0: float = 0.0
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        habs = jnp.abs(h)
+        chi = (habs >= jnp.asarray(self.thresholds)).astype(h.real.dtype)
+        s = chi * jnp.asarray(self.gamma) / self.alpha
+        noise_scale = jnp.asarray(np.sqrt(self.n0) / self.alpha,
+                                  dtype=h.real.dtype)
+        return s, noise_scale
+
+
+def _make_truncated(name: str, gamma: np.ndarray, prm: OTAParams) -> TruncatedInversion:
+    am, a, pm = theory.participation(gamma, prm)
+    return TruncatedInversion(
+        name=name, requires_global_csi=False,
+        gamma=np.asarray(gamma, np.float64), alpha=a, p=pm,
+        thresholds=theory.chi_threshold(gamma, prm), n0=prm.n0)
+
+
+def make_sca(deployment: Deployment, prm: OTAParams, **kw) -> TruncatedInversion:
+    res = sca_mod.solve_sca(prm, **kw)
+    pc = _make_truncated("sca", res.gamma, prm)
+    pc.sca_result = res  # attach for inspection
+    return pc
+
+
+def make_lcpc(deployment: Deployment, prm: OTAParams,
+              grid_size: int = 512) -> TruncatedInversion:
+    """Common pre-scaler, grid-optimized expected-MSE with statistical CSI."""
+    gmax_arr = theory.gamma_max(prm)
+    grid = np.geomspace(1e-3 * gmax_arr.min(), gmax_arr.max(), grid_size)
+    best_g, best_v = None, np.inf
+    n = prm.num_devices
+    for g in grid:
+        gamma = np.full(n, g)
+        am = theory.alpha_of_gamma(gamma, prm)
+        a = am.sum()
+        if a <= 0:
+            continue
+        pm = am / a
+        z = theory.zeta_terms(gamma, prm)
+        # expected MSE proxy: variance + squared-bias (G^2-scaled; LCPC has no
+        # access to the true dissimilarity kappa -> 'less controllable bias')
+        v = z["total"] + prm.gmax**2 * n * np.sum((pm - 1.0 / n) ** 2)
+        if v < best_v:
+            best_g, best_v = g, v
+    return _make_truncated("lcpc", np.full(n, best_g), prm)
+
+
+def make_zero_bias(deployment: Deployment, prm: OTAParams,
+                   slack: float = 1.0) -> TruncatedInversion:
+    return _make_truncated("zero_bias", theory.zero_bias_gamma(prm, slack), prm)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla OTA-FL [5]: zero instantaneous bias; common scale c_t bound by the
+# weakest instantaneous channel.  Needs global instantaneous CSI.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VanillaOTA(PowerControl):
+    bmax: float = 0.0
+    n0: float = 0.0
+    num_devices: int = 0
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        habs = jnp.abs(h)
+        c_t = self.bmax * jnp.min(habs)
+        n = self.num_devices
+        s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
+        noise_scale = jnp.sqrt(self.n0) / (n * c_t)
+        return s, noise_scale.astype(h.real.dtype)
+
+
+def make_vanilla(deployment: Deployment, prm: OTAParams) -> VanillaOTA:
+    n = prm.num_devices
+    return VanillaOTA(name="vanilla", requires_global_csi=True,
+                      p=np.full(n, 1.0 / n), bmax=_bmax(prm), n0=prm.n0,
+                      num_devices=n)
+
+
+# ---------------------------------------------------------------------------
+# OPC OTA-Comp [13]: per-round MSE-optimal (threshold structure).  For a
+# denoising scale c, the MSE-optimal amplitudes are b_m = min(c/(N|h_m|),
+# bmax): strong channels invert to the common target, weak channels transmit
+# at full power.  c is optimized on a fixed log grid (jit-friendly).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OPC(PowerControl):
+    bmax: float = 0.0
+    n0: float = 0.0
+    gmax: float = 0.0
+    num_devices: int = 0
+    grid_size: int = 128
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        habs = jnp.abs(h)
+        n = self.num_devices
+        base = self.bmax * habs * n                  # c at which device m leaves inversion
+        c_lo = 0.02 * jnp.min(base)
+        c_hi = 50.0 * jnp.max(base)
+        grid = jnp.exp(jnp.linspace(jnp.log(c_lo), jnp.log(c_hi),
+                                    self.grid_size))
+
+        def mse(c):
+            b = jnp.minimum(c / (n * habs), self.bmax)
+            sig = jnp.sum((b * habs / c - 1.0 / n) ** 2) * self.gmax**2
+            return sig + self.n0 / c**2
+
+        vals = jax.vmap(mse)(grid)
+        c_star = grid[jnp.argmin(vals)]
+        # zoom refinement around the coarse optimum
+        for _ in range(2):
+            fine = c_star * jnp.exp(jnp.linspace(-0.15, 0.15, 33))
+            c_star = fine[jnp.argmin(jax.vmap(mse)(fine))]
+        b = jnp.minimum(c_star / (n * habs), self.bmax)
+        s = (b * habs / c_star).astype(h.real.dtype)
+        noise_scale = (jnp.sqrt(self.n0) / c_star).astype(h.real.dtype)
+        return s, noise_scale
+
+
+def make_opc(deployment: Deployment, prm: OTAParams) -> OPC:
+    n = prm.num_devices
+    return OPC(name="opc", requires_global_csi=True, p=np.full(n, 1.0 / n),
+               bmax=_bmax(prm), n0=prm.n0, gmax=prm.gmax, num_devices=n)
+
+
+# ---------------------------------------------------------------------------
+# BB-FL [11]: interior scheduling within R_in (and the alternating variant).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BBFL(PowerControl):
+    mask: Optional[np.ndarray] = None    # [N] 1 if within R_in
+    alternative: bool = False
+    bmax: float = 0.0
+    n0: float = 0.0
+    num_devices: int = 0
+
+    def _coeffs_for_mask(self, habs, mask):
+        k = jnp.sum(mask)
+        c_t = self.bmax * jnp.min(jnp.where(mask > 0, habs, jnp.inf))
+        s = mask / k
+        noise_scale = jnp.sqrt(self.n0) / (k * c_t)
+        return s.astype(habs.dtype), noise_scale.astype(habs.dtype)
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        habs = jnp.abs(h)
+        interior = jnp.asarray(self.mask, dtype=habs.dtype)
+        if not self.alternative:
+            return self._coeffs_for_mask(habs, interior)
+        full = jnp.ones_like(interior)
+        use_full = jax.random.bernoulli(key, 0.5)
+        s_i, ns_i = self._coeffs_for_mask(habs, interior)
+        s_f, ns_f = self._coeffs_for_mask(habs, full)
+        s = jnp.where(use_full, s_f, s_i)
+        ns = jnp.where(use_full, ns_f, ns_i)
+        return s, ns
+
+
+def make_bbfl(deployment: Deployment, prm: OTAParams, alternative: bool,
+              r_in_frac: float = 0.6) -> BBFL:
+    r_in = r_in_frac * deployment.cfg.r_max
+    mask = (deployment.distances <= r_in).astype(np.float64)
+    if mask.sum() == 0:  # degenerate deployment: keep the closest device
+        mask[np.argmin(deployment.distances)] = 1.0
+    n = prm.num_devices
+    name = "bbfl_alternative" if alternative else "bbfl_interior"
+    # average participation: interior always on; alternative: 0.5 full + 0.5 interior
+    k = mask.sum()
+    p = (mask / k) if not alternative else 0.5 * (mask / k) + 0.5 / n
+    return BBFL(name=name, requires_global_csi=True, p=p, mask=mask,
+                alternative=alternative, bmax=_bmax(prm), n0=prm.n0,
+                num_devices=n)
+
+
+# ---------------------------------------------------------------------------
+# Ideal FedAvg: noiseless uniform aggregation (eq. (2)).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ideal(PowerControl):
+    num_devices: int = 0
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        n = self.num_devices
+        s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
+        return s, jnp.zeros((), dtype=h.real.dtype)
+
+
+def make_ideal(deployment: Deployment, prm: OTAParams) -> Ideal:
+    n = prm.num_devices
+    return Ideal(name="ideal", p=np.full(n, 1.0 / n), num_devices=n)
+
+
+# ---------------------------------------------------------------------------
+
+SCHEMES = ("sca", "lcpc", "vanilla", "opc", "bbfl_interior",
+           "bbfl_alternative", "ideal", "zero_bias")
+
+
+def make_power_control(name: str, deployment: Deployment, prm: OTAParams,
+                       **kw) -> PowerControl:
+    if name == "sca":
+        return make_sca(deployment, prm, **kw)
+    if name == "lcpc":
+        return make_lcpc(deployment, prm, **kw)
+    if name == "vanilla":
+        return make_vanilla(deployment, prm)
+    if name == "opc":
+        return make_opc(deployment, prm)
+    if name == "bbfl_interior":
+        return make_bbfl(deployment, prm, alternative=False, **kw)
+    if name == "bbfl_alternative":
+        return make_bbfl(deployment, prm, alternative=True, **kw)
+    if name == "ideal":
+        return make_ideal(deployment, prm)
+    if name == "zero_bias":
+        return make_zero_bias(deployment, prm, **kw)
+    raise ValueError(f"unknown power-control scheme: {name!r}; "
+                     f"available: {SCHEMES}")

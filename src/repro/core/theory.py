@@ -1,0 +1,183 @@
+"""Theorem-1 quantities for biased OTA-FL (paper §II-B, §III).
+
+Everything here is closed-form float64 numpy over the *statistical* CSI
+{Lambda_m}; these functions define both the convergence bound and the SCA
+objective.
+
+Key maps (paper eqs. (5)-(10)):
+
+    chi threshold:  |h| >= Gmax * gamma_m / sqrt(d * Es)
+    E[chi_m]      = exp(-gamma_m^2 Gmax^2 / (d Lambda_m Es))      (Rayleigh)
+    alpha_m(gamma)= gamma_m * E[chi_m]
+    alpha         = sum_m alpha_m          (PS post-scaler)
+    p_m           = alpha_m / alpha        (average participation level)
+
+    zeta = Gmax^2 * sum_m (p_m gamma_m / alpha - p_m^2)     transmission var
+         + sum_m p_m^2 sigma_m^2                            mini-batch var
+         + d N0 / alpha^2                                   receiver noise
+
+    bias = 2 N kappa^2 sum_m (p_m - 1/N)^2
+
+    Theorem 1:  (1/T) sum_t E||grad F||^2
+        <= 4 max_m (f_m(w0)-f_m^inf) / (eta T) + 2 eta L zeta + bias
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OTAParams:
+    """Problem constants entering the bound and the power-control design."""
+    d: int                    # model dimension
+    gmax: float               # G_max: uniform bound on sample gradients
+    es: float                 # E_s: per-sample energy budget
+    n0: float                 # N0: receiver noise PSD
+    gains: np.ndarray         # [N] Lambda_m
+    sigma_sq: np.ndarray      # [N] per-device mini-batch gradient variance bound
+    eta: float = 0.01         # learning rate (enters P1 objective weight)
+    lsmooth: float = 1.0      # L-smoothness constant
+    kappa_sq: float = 1.0     # kappa^2: gradient dissimilarity bound
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.asarray(self.gains).shape[0])
+
+    def replace(self, **kw) -> "OTAParams":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# alpha_m(gamma) and its extremes
+# ---------------------------------------------------------------------------
+
+def trunc_exponent(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
+    """gamma^2 Gmax^2 / (d Lambda Es)  — the exponent in E[chi]."""
+    gamma = np.asarray(gamma, dtype=np.float64)
+    return gamma**2 * p.gmax**2 / (p.d * p.gains * p.es)
+
+
+def expected_participation_indicator(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
+    """E[chi_{m,t}] = exp(-gamma^2 Gmax^2 / (d Lambda Es)) under Rayleigh."""
+    return np.exp(-trunc_exponent(gamma, p))
+
+
+def alpha_of_gamma(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
+    """alpha_m = gamma_m * E[chi_m]."""
+    return np.asarray(gamma, dtype=np.float64) * expected_participation_indicator(gamma, p)
+
+
+def gamma_max(p: OTAParams) -> np.ndarray:
+    """Maximizer of alpha_m(gamma): gamma_{m,max} = sqrt(d Lambda Es / (2 Gmax^2))."""
+    return np.sqrt(p.d * p.gains * p.es / (2.0 * p.gmax**2))
+
+
+def alpha_max(p: OTAParams) -> np.ndarray:
+    """alpha_{m,max} = alpha_m(gamma_{m,max}) = sqrt(d Lambda Es / (2 e Gmax^2))."""
+    return np.sqrt(p.d * p.gains * p.es / (2.0 * np.e * p.gmax**2))
+
+
+def chi_threshold(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
+    """|h| threshold below which device m stays silent: Gmax gamma / sqrt(d Es)."""
+    return p.gmax * np.asarray(gamma, dtype=np.float64) / np.sqrt(p.d * p.es)
+
+
+def invert_alpha(alpha_target: np.ndarray, p: OTAParams) -> np.ndarray:
+    """Smaller root gamma_{m,1} of alpha_m(gamma) = alpha_target (per device).
+
+    alpha_m(gamma) is quasi-concave with max at gamma_max; the paper restricts
+    to the branch gamma <= gamma_max (constraint (ii)), where the map is
+    increasing.  Solved by bisection.
+    """
+    alpha_target = np.asarray(alpha_target, dtype=np.float64)
+    amax = alpha_max(p)
+    if np.any(alpha_target > amax * (1 + 1e-12)):
+        raise ValueError("alpha_target exceeds alpha_max; infeasible")
+    gmax_arr = gamma_max(p)
+    lo = np.zeros_like(gmax_arr)
+    hi = gmax_arr.copy()
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        val = alpha_of_gamma(mid, p)
+        go_up = val < alpha_target
+        lo = np.where(go_up, mid, lo)
+        hi = np.where(go_up, hi, mid)
+    return 0.5 * (lo + hi)
+
+
+# ---------------------------------------------------------------------------
+# Participation, variance and the bound
+# ---------------------------------------------------------------------------
+
+def participation(gamma: np.ndarray, p: OTAParams):
+    """Return (alpha_m[N], alpha, p_m[N]) for pre-scalers gamma."""
+    am = alpha_of_gamma(gamma, p)
+    a = float(np.sum(am))
+    if a <= 0:
+        raise ValueError("alpha = 0: all devices silent")
+    return am, a, am / a
+
+
+def zeta_terms(gamma: np.ndarray, p: OTAParams):
+    """The three components of the gradient-estimation variance zeta (eq. 10).
+
+    Returns dict with 'transmission', 'minibatch', 'noise', 'total'.
+    """
+    _, a, pm = participation(gamma, p)
+    gamma = np.asarray(gamma, dtype=np.float64)
+    tx = p.gmax**2 * float(np.sum(pm * gamma / a - pm**2))
+    mb = float(np.sum(pm**2 * np.asarray(p.sigma_sq, dtype=np.float64)))
+    nz = p.d * p.n0 / a**2
+    return {"transmission": tx, "minibatch": mb, "noise": nz,
+            "total": tx + mb + nz}
+
+
+def bias_term(pm: np.ndarray, p: OTAParams) -> float:
+    """2 N kappa^2 sum_m (p_m - 1/N)^2."""
+    n = p.num_devices
+    pm = np.asarray(pm, dtype=np.float64)
+    return 2.0 * n * p.kappa_sq * float(np.sum((pm - 1.0 / n) ** 2))
+
+
+def p1_objective(gamma: np.ndarray, p: OTAParams) -> float:
+    """The (P1) objective: 2 eta L zeta + bias  (Theorem 1 minus init term)."""
+    z = zeta_terms(gamma, p)["total"]
+    _, _, pm = participation(gamma, p)
+    return 2.0 * p.eta * p.lsmooth * z + bias_term(pm, p)
+
+
+def theorem1_bound(gamma: np.ndarray, p: OTAParams, init_gap: float,
+                   num_rounds: int) -> dict:
+    """Full Theorem-1 bound, split into its three components.
+
+    init_gap = max_m (f_m(w0) - f_m^inf).
+    """
+    z = zeta_terms(gamma, p)
+    _, _, pm = participation(gamma, p)
+    opt = 4.0 * init_gap / (p.eta * num_rounds)
+    var = 2.0 * p.eta * p.lsmooth * z["total"]
+    bias = bias_term(pm, p)
+    return {"optimization": opt, "variance": var, "bias": bias,
+            "total": opt + var + bias, "zeta": z, "p": pm}
+
+
+def uniform_feasible(p: OTAParams) -> bool:
+    """Whether the zero-bias point p_m = 1/N is feasible, i.e. there exists
+    alpha with alpha/N <= alpha_{m,max} for all m: alpha <= N * min alpha_max."""
+    return bool(np.min(alpha_max(p)) > 0)
+
+
+def zero_bias_gamma(p: OTAParams, slack: float = 1.0) -> np.ndarray:
+    """Pre-scalers enforcing zero average bias (p_m = 1/N exactly).
+
+    Sets every alpha_m to the same value slack * min_m alpha_{m,max} (the
+    weakest device binds — the paper's 'constrained by the worst channel'
+    regime), and inverts alpha_m(gamma) on the increasing branch.
+    """
+    if not (0.0 < slack <= 1.0):
+        raise ValueError("slack in (0, 1]")
+    target = slack * float(np.min(alpha_max(p)))
+    return invert_alpha(np.full(p.num_devices, target), p)

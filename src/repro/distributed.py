@@ -1,0 +1,89 @@
+"""Logical-axis sharding constraints.
+
+Model code annotates activations with *logical* axes (e.g. ("batch", None,
+None)); the launcher binds a mesh + rules, and `constrain` lowers to
+with_sharding_constraint.  Outside a bound mesh (CPU smoke tests) it is a
+no-op, so the same model code serves both paths.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "batch_pod": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,         # overridden to ("data",) for long-context decode
+    "heads": ("model",),
+    "ff": ("model",),
+    "embed": None,
+    "vocab": ("model",),
+    "expert": None,
+}
+
+
+def bind(mesh: Mesh, rules: Optional[dict] = None):
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES)
+    if rules:
+        _state.rules.update(rules)
+
+
+def unbind():
+    _state.mesh = None
+    _state.rules = None
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Mesh, rules: Optional[dict] = None):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    bind(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def logical_to_spec(logical) -> P:
+    rules = getattr(_state, "rules", None) or DEFAULT_RULES
+    mesh = active_mesh()
+    axes = []
+    for ax in logical:
+        mapped = rules.get(ax) if isinstance(ax, str) else ax
+        if mapped is None:
+            axes.append(None)
+            continue
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        present = tuple(a for a in mapped if mesh is None
+                        or a in mesh.axis_names)
+        axes.append(present if present else None)
+    return P(*axes)
+
+
+def constrain(x, logical):
+    """Apply a sharding constraint by logical axis names; no-op w/o a mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_logical():
+    """'batch' or 'batch_pod' depending on the bound mesh."""
+    mesh = active_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        return "batch_pod"
+    return "batch"

@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the kernel
+body runs as traced JAX ops, validating indexing/masking/accumulation logic;
+on TPU (the target) the same pallas_call lowers to Mosaic.  Wrappers handle
+padding to hardware-aligned tile sizes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ota_aggregate as oa
+from repro.kernels import ssd_scan as ss
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ota_aggregate(g: jax.Array, s: jax.Array, z: jax.Array,
+                  noise_scale: jax.Array, *, block_d: int = 64 * 1024,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Fused OTA aggregation over [N, D] gradients (see ota_aggregate.py)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    gp, d0 = _pad_to(g, 1, 8 * 128)
+    zp, _ = _pad_to(z, 0, 8 * 128)
+    blk = min(block_d, gp.shape[1])
+    while gp.shape[1] % blk:
+        blk //= 2
+    out = oa.ota_aggregate_pallas(gp, s, zp,
+                                  jnp.asarray(noise_scale, gp.dtype),
+                                  block_d=blk, interpret=interpret)
+    return out[:d0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Blocked attention [B,Sq,H,Dh] x [B,Sk,KH,Dh] -> [B,Sq,H,Dh]."""
+    interpret = _on_cpu() if interpret is None else interpret
+    sq, sk = q.shape[1], k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    qp, sq0 = _pad_to(q, 1, bq)
+    kp, _ = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    if not causal and kp.shape[1] != sk:
+        raise ValueError("non-causal attention requires Sk % block_k == 0 "
+                         "(padded keys would be attended)")
+    # padded k positions are masked out by causal (they sit in the future)
+    out = fa.flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                    block_q=bq, block_k=bk,
+                                    interpret=interpret)
+    return out[:, :sq0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a_neg: jax.Array,
+             b_mat: jax.Array, c_mat: jax.Array, *, chunk: int = 128,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba-2 SSD scan [B,S,H,P] -> [B,S,H,P] (see ssd_scan.py)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    s = x.shape[1]
+    ch = min(chunk, s)
+    while s % ch:
+        ch //= 2
+    return ss.ssd_scan_pallas(x, dt, a_neg, b_mat, c_mat, chunk=ch,
+                              interpret=interpret)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ota_aggregate_ref(g: jax.Array, s: jax.Array, z: jax.Array,
+                      noise_scale: jax.Array) -> jax.Array:
+    """out = sum_m s_m g_m + noise_scale * z  (g: [N, D])."""
+    return jnp.sum(g * s[:, None].astype(g.dtype), axis=0) \
+        + (noise_scale * z).astype(g.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """Naive full-score GQA attention. q: [B,Sq,H,Dh]; k,v: [B,Sk,KH,Dh]."""
+    b, sq, h, dh = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_neg: jax.Array, b_mat: jax.Array,
+            c_mat: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence (the mathematical definition):
+
+        S_t = exp(dt_t a) S_{t-1} + dt_t B_t (x) x_t
+        y_t = C_t . S_t
+
+    x: [B,S,H,P]; dt: [B,S,H]; a_neg: [H]; b_mat/c_mat: [B,S,G,N].
+    """
+    bsz, s, h, p_dim = x.shape
+    g = b_mat.shape[2]
+    n_dim = b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2) if rep > 1 else b_mat
+    ch = jnp.repeat(c_mat, rep, axis=2) if rep > 1 else c_mat
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # [B,H,P],[B,H],[B,H,N],..
+        da = jnp.exp(dtt * a_neg[None, :])          # [B,H]
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          ch.transpose(1, 0, 2, 3).astype(jnp.float32))
+    state0 = jnp.zeros((bsz, h, p_dim, n_dim), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

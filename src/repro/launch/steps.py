@@ -1,0 +1,255 @@
+"""Distributed step functions: OTA-FL train step, prefill, decode.
+
+The train step implements the paper's update (7) in the pjit-native
+weighted-loss form (DESIGN.md §3): FL clients are the (pod, data) batch
+slices; per-round fading draws the coefficients s_m = chi_{m,t} gamma_m / alpha
+from the bound scheme; client-weighted loss makes XLA's gradient all-reduce
+compute the OTA superposition; receiver noise is added to the aggregated
+gradient; the PS update is plain SGD (paper) or any optim/ optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import distributed as dist
+from repro.core import ota
+from repro.core.power_control import PowerControl
+from repro.launch import mesh as mesh_lib
+from repro.models.param import abstract_params, param_specs
+from repro.models.registry import ModelBundle
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def _filter_spec(spec: P, mesh: Mesh) -> P:
+    axes = []
+    for ax in spec:
+        if ax is None:
+            axes.append(None)
+        elif isinstance(ax, (tuple, list)):
+            keep = tuple(a for a in ax if a in mesh.axis_names)
+            axes.append(keep if keep else None)
+        else:
+            axes.append(ax if ax in mesh.axis_names else None)
+    return P(*axes)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(spec, mesh))
+
+
+def param_shardings(bundle: ModelBundle, mesh: Mesh):
+    return jax.tree.map(lambda s: named(mesh, s), param_specs(bundle.defs))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    axes = mesh_lib.batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    lead = axes if global_batch % total == 0 else None
+    return P(lead, *([None] * extra_dims))
+
+
+# --- cache sharding rules, keyed on leaf name (see models/*/init_*_cache) ---
+
+_CACHE_BASE_NDIM = {"k": 4, "v": 4, "ckv": 3, "krope": 3,
+                    "ssm": 4, "conv": 3, "h": 2}
+
+
+def _cache_leaf_spec(name: str, shape: tuple, mesh: Mesh,
+                     batch_div: bool) -> P:
+    base = _CACHE_BASE_NDIM[name]
+    extra = len(shape) - base          # stacked layer axes (scan groups)
+    core = shape[extra:]
+    m = mesh.shape.get("model", 1)
+    d = mesh.shape.get("data", 1)
+    baxes = mesh_lib.batch_axes(mesh)
+    b_ax = baxes if batch_div else None
+    if name in ("k", "v"):
+        b, s, kh, dh = core
+        seq_ax = "data" if (not batch_div and s % d == 0) else None
+        head_ax = "model" if kh % m == 0 else None
+        spec = (b_ax, seq_ax, head_ax, None)
+    elif name in ("ckv", "krope"):
+        b, s, r = core
+        seq_ax = "data" if (not batch_div and s % d == 0) else None
+        spec = (b_ax, seq_ax, "model" if r % m == 0 else None)
+    elif name == "ssm":
+        b, h, pd, n = core
+        spec = (b_ax, "model" if h % m == 0 else None, None, None)
+    elif name == "conv":
+        b, k, c = core
+        spec = (b_ax, None, "model" if c % m == 0 else None)
+    else:  # "h"
+        b, w = core
+        spec = (b_ax, "model" if w % m == 0 else None)
+    return P(*([None] * extra + list(spec)))
+
+
+def cache_shardings(abstract_caches: PyTree, mesh: Mesh, global_batch: int):
+    baxes = mesh_lib.batch_axes(mesh)
+    total = 1
+    for a in baxes:
+        total *= mesh.shape[a]
+    batch_div = global_batch % total == 0
+
+    def leaf(path, x):
+        name = None
+        for pp in reversed(path):
+            key = str(getattr(pp, "key", getattr(pp, "idx", "")))
+            if key in _CACHE_BASE_NDIM:
+                name = key
+                break
+        if name is None:
+            raise ValueError(f"unrecognized cache leaf at {path}")
+        return named(mesh, _cache_leaf_spec(name, x.shape, mesh, batch_div))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_caches)
+
+
+# ---------------------------------------------------------------------------
+# OTA-FL train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainStepConfig:
+    eta: float = 1e-2
+    optimizer: str = "sgd"          # paper: plain SGD (eq. 7)
+
+
+def make_train_step(bundle: ModelBundle, scheme: PowerControl,
+                    gains: np.ndarray, tcfg: TrainStepConfig):
+    """(params, batch, key) -> (params, metrics).  Pure; pjit-ready."""
+    gains_j = jnp.asarray(np.asarray(gains), jnp.float32)
+    n_clients = int(gains_j.shape[0])
+
+    def train_step(params, batch, key):
+        k_fade, k_coeff, k_noise = jax.random.split(key, 3)
+        h = ota.draw_fading(k_fade, gains_j)
+        s, noise_scale = scheme.round_coeffs(h, k_coeff)
+        w = ota.per_client_loss_weights(s)                  # [N]
+        tokens = batch[1] if isinstance(batch, tuple) else batch
+        gb = tokens.shape[0]
+        client_ids = jnp.arange(gb) // (gb // n_clients)
+        sample_w = w[client_ids]
+
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch,
+                                                      sample_w)
+        grads = ota.add_receiver_noise(grads, noise_scale, k_noise)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - tcfg.eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        metrics = {"loss": loss,
+                   "active_clients": jnp.sum((s > 0).astype(jnp.float32)),
+                   "noise_scale": noise_scale.astype(jnp.float32)}
+        return new_params, metrics
+
+    return train_step
+
+
+def make_ideal_train_step(bundle: ModelBundle, tcfg: TrainStepConfig):
+    """Noiseless FedAvg reference (eq. (2)) — also the plain-SGD baseline."""
+
+    def train_step(params, batch, key):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - tcfg.eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, {"loss": loss}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, inputs, caches):
+        return bundle.prefill(params, inputs, caches)
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle):
+    """One decode step: token [B,1] against a seq_len KV cache/state."""
+    def serve_step(params, caches, token, pos):
+        logits, caches = bundle.decode(params, caches, token, pos)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_token, caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch x shape) — ShapeDtypeStructs, never allocated
+# ---------------------------------------------------------------------------
+
+def input_specs(bundle: ModelBundle, shape, mesh: Mesh):
+    """Returns (args tuple of ShapeDtypeStruct, in_shardings tuple) for the
+    step matching shape.kind: train | prefill | decode.
+    """
+    cfg = bundle.cfg
+    gb, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    bspec1 = named(mesh, batch_spec(mesh, gb, 1))
+    bspec2 = named(mesh, batch_spec(mesh, gb, 2))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    key_sh = named(mesh, P())
+
+    if shape.kind == "train":
+        if cfg.is_enc_dec:
+            frames = jax.ShapeDtypeStruct((gb, s, cfg.d_model),
+                                          cfg.compute_dtype)
+            tokens = jax.ShapeDtypeStruct((gb, s + 1), tok)
+            return ((frames, tokens), key), ((bspec2, bspec1), key_sh)
+        tokens = jax.ShapeDtypeStruct((gb, s + 1), tok)
+        return (tokens, key), (bspec1, key_sh)
+
+    if shape.kind == "prefill":
+        caches = jax.eval_shape(lambda: bundle.init_caches(gb, s))
+        c_sh = cache_shardings(caches, mesh, gb)
+        if cfg.is_enc_dec:
+            frames = jax.ShapeDtypeStruct((gb, s, cfg.d_model),
+                                          cfg.compute_dtype)
+            dec = jax.ShapeDtypeStruct((gb, s), tok)
+            return ((frames, dec), caches), ((bspec2, bspec1), c_sh)
+        tokens = jax.ShapeDtypeStruct((gb, s), tok)
+        return (tokens, caches), (bspec1, c_sh)
+
+    if shape.kind == "decode":
+        if cfg.is_enc_dec:
+            self_c = jax.eval_shape(lambda: bundle.init_caches(gb, s))
+            cross_c = jax.eval_shape(
+                lambda: _abstract_cross_caches(bundle, gb, s))
+            caches = (self_c, cross_c)
+            c_sh = (cache_shardings(self_c, mesh, gb),
+                    cache_shardings(cross_c, mesh, gb))
+        else:
+            caches = jax.eval_shape(lambda: bundle.init_caches(gb, s))
+            c_sh = cache_shardings(caches, mesh, gb)
+        token = jax.ShapeDtypeStruct((gb, 1), tok)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return (caches, token, pos), (c_sh, bspec1, named(mesh, P()))
+
+    raise ValueError(shape.kind)
+
+
+def _abstract_cross_caches(bundle: ModelBundle, gb: int, s: int):
+    cfg = bundle.cfg
+    dh = cfg.resolved_head_dim
+    kv = jnp.zeros((cfg.n_layers, gb, s, cfg.n_kv_heads, dh),
+                   cfg.compute_dtype)
+    return {"k": kv, "v": kv}

@@ -1,0 +1,433 @@
+"""Attention mixers: GQA (with qk-norm / QKV-bias / sliding-window / local
+ring-cache variants), MLA (DeepSeek-V3 latent attention), and cross-attention
+for the encoder-decoder family.
+
+Memory-bounded softmax: for long sequences the query axis is processed in
+blocks via lax.map so the materialized score tile is O(block_q * S_k), which
+keeps the 32k-prefill lowering within per-chip HBM on the production mesh.
+Decode (S_q = 1) reads a KV cache: linear cache for full attention, ring
+buffer (size = window) for sliding/local attention so long_500k decode stays
+O(window) in both memory and FLOPs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import distributed as dist
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense, dense_def, rmsnorm, rmsnorm_def
+from repro.models.param import ParamDef, divisible
+
+NEG_INF = -1e30
+
+# When True, grouped_attention materializes full scores instead of
+# lax.map-blocking the query axis.  Used ONLY by launch/cost.py analysis
+# lowerings: XLA's cost_analysis counts loop bodies once, so the blocked
+# (lax.map) form under-reports attention FLOPs by the block count.  The
+# production compile keeps blocking (memory-bounded); the analysis compile
+# trades memory honesty for FLOP honesty.
+ANALYSIS_DIRECT_ATTENTION = False
+
+
+# ---------------------------------------------------------------------------
+# Core masked softmax attention (grouped heads, blocked queries)
+# ---------------------------------------------------------------------------
+
+def _scores_mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """[Sq, Sk] boolean mask of allowed attention."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def grouped_attention(q, k, v, qpos, kpos, *, causal: bool,
+                      window: Optional[int], block_k: int = 1024):
+    """q: [B,Sq,H,Dh]; k,v: [B,Sk,KH,Dh(v)]; returns [B,Sq,H,Dv].
+
+    H = KH * G (grouped-query attention). Softmax in float32.
+
+    Long sequences run an online-softmax scan over K-BLOCKS (flash-style):
+    the query tensor is never re-tiled, so whatever sharding it carries
+    (heads over 'model', or — for head counts that don't divide the TP
+    axis — the sequence axis over 'model', see §Perf it.3) is preserved;
+    k/v blocks are static slices, free under SPMD.
+    """
+    b, sq, h, dh = q.shape
+    kh = k.shape[2]
+    sk = k.shape[1]
+    g = h // kh
+    dv = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qg = q.reshape(b, sq, kh, g, dh)
+
+    def attend(q_all, qpos_all):
+        # direct: scores [B,KH,G,Sq,Sk]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_all.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = _scores_mask(qpos_all, kpos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+        return o.reshape(b, sq, h, dv)
+
+    if (sq * sk <= 2048 * 2048) or ANALYSIS_DIRECT_ATTENTION:
+        return attend(qg, qpos).astype(q.dtype)
+
+    pad_k = (-sk) % block_k
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # padded keys get position max(qpos)+1: masked by causal/window
+    kpos_f = jnp.concatenate(
+        [kpos, jnp.broadcast_to(jnp.max(qpos) + 1, (pad_k,))])
+    nb = (sk + pad_k) // block_k
+    kb = kf.reshape(b, nb, block_k, kh, dh).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(b, nb, block_k, kh, dv).transpose(1, 0, 2, 3, 4)
+    kpb = kpos_f.reshape(nb, block_k)
+    qf = qg.astype(jnp.float32)
+
+    def step(carry, blk):
+        m_p, l_p, acc_p = carry
+        k_blk, v_blk, kpos_blk = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                       k_blk.astype(jnp.float32)) * scale
+        mask = _scores_mask(qpos, kpos_blk, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_p, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_p - m_new)
+        l_new = l_p * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_p * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+def gqa_def(cfg: ModelConfig, tp: int = 16):
+    dh = cfg.resolved_head_dim
+    d = cfg.d_model
+    # §Perf it.2: k and v fused into one column-parallel matmul on an
+    # unsharded 2-axis — backward emits ONE d_x partial all-reduce for k+v
+    # instead of two (the baseline HLO showed a 3-tuple all-reduce of
+    # [B,S,D] per layer for q,k,v).  A full qkv fusion would split across
+    # the model-sharded output axis (q and kv segments are not slice-
+    # aligned at tp=16), so only the equal-shaped k/v pair is fused.
+    kv = cfg.n_kv_heads * dh
+    defs = {
+        "wq": dense_def(d, cfg.n_heads * dh, cfg, tp_out=True,
+                        bias=cfg.qkv_bias, tp=tp),
+        "wkv": ParamDef(
+            (d, 2, kv), init="scaled",
+            spec=P("data" if divisible(d, tp) else None, None,
+                   "model" if divisible(kv, tp) else None),
+            dtype=cfg.param_dtype, fan_in=d),
+        "wo": dense_def(cfg.n_heads * dh, d, cfg, tp_out=False, tp=tp),
+    }
+    if cfg.qkv_bias:
+        defs["bkv"] = ParamDef(
+            (2, kv), init="zeros",
+            spec=P(None, "model" if divisible(kv, tp) else None),
+            dtype=cfg.param_dtype)
+    if cfg.qk_norm:
+        defs["q_norm"] = rmsnorm_def(dh, cfg.param_dtype)
+        defs["k_norm"] = rmsnorm_def(dh, cfg.param_dtype)
+    return defs
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+                  dtype=None):
+    """Abstract/zero KV cache for one attention layer."""
+    dh = cfg.resolved_head_dim
+    dtype = dtype or cfg.compute_dtype
+    if kind in ("swa", "local") and cfg.window and max_len > cfg.window:
+        max_len = cfg.window            # ring buffer
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+    }
+
+
+def _cache_write(cache, k_new, v_new, pos, ring: bool):
+    """Insert [B,S,KH,Dh] at position ``pos`` (scalar int array)."""
+    s = k_new.shape[1]
+    cap = cache["k"].shape[1]
+    k_new = k_new.astype(cache["k"].dtype)
+    v_new = v_new.astype(cache["v"].dtype)
+    if ring and s == 1:
+        idx = jnp.mod(pos, cap)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, idx, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, idx, 0, 0))
+    elif ring and s >= cap:
+        # prefill into a ring buffer: keep the trailing ``cap`` entries, laid
+        # out so that slot j holds the entry with absolute position ≡ j (cap).
+        first_pos = pos + s - cap
+        shift = jnp.mod(first_pos, cap)
+        k = jnp.roll(k_new[:, -cap:], shift, axis=1)
+        v = jnp.roll(v_new[:, -cap:], shift, axis=1)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    return {"k": k, "v": v}
+
+
+def gqa_apply(p, x, cfg: ModelConfig, *, kind: str = "attn",
+              pos_offset=0, cache=None, decode: bool = False,
+              positions=None):
+    """Self-attention. Returns (out, new_cache).
+
+    kind: attn (full causal) | swa | local (both sliding-window causal).
+    decode: S_q == 1, reads+updates cache.
+    """
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    ct = cfg.compute_dtype
+    window = cfg.window if kind in ("swa", "local") else None
+    causal = kind != "enc_attn"
+
+    q = dense(p["wq"], x, ct).reshape(b, s, cfg.n_heads, dh)
+    kv2 = jnp.einsum("...d,dgk->...gk", x.astype(ct), p["wkv"].astype(ct))
+    if "bkv" in p:
+        kv2 = kv2 + p["bkv"].astype(ct)
+    k = kv2[..., 0, :].reshape(b, s, cfg.n_kv_heads, dh)
+    v = kv2[..., 1, :].reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if positions is None:
+        positions = pos_offset + jnp.arange(s)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # §Perf it.3: when the head count does not divide the TP axis (e.g.
+    # qwen2.5's 40 heads on a 16-way model axis) auto-SPMD splits the
+    # head_dim contraction and ALL-REDUCES the full SqxSk score tensor
+    # (~43 GB/layer measured at 32k).  Shard the query SEQUENCE over
+    # 'model' instead and replicate k/v: attention becomes fully local,
+    # at the cost of one [B,S,D] all-gather after wo.
+    mesh = dist.active_mesh()
+    if (not decode and s > 1 and mesh is not None
+            and "model" in mesh.axis_names
+            and cfg.n_heads % mesh.shape["model"]
+            and s % mesh.shape["model"] == 0):
+        bl = dist.batch_logical()
+        q = dist.constrain(q, (bl, ("model",), None, None))
+        k = dist.constrain(k, (bl, None, None, None))
+        v = dist.constrain(v, (bl, None, None, None))
+
+    if decode:
+        assert cache is not None and s == 1
+        cap = cache["k"].shape[1]
+        ring = window is not None and cap <= window
+        cache = _cache_write(cache, k, v, positions[0], ring)
+        if ring:
+            # ring buffer: absolute position of slot i is recovered from the
+            # write pointer; everything in the buffer is within the window.
+            kpos = positions[0] - jnp.mod(positions[0] - jnp.arange(cap), cap)
+            # warmup slots (never written) decode to negative positions —
+            # push them into the future so the causal mask blocks them.
+            kpos = jnp.where(kpos < 0, positions[0] + 1, kpos)
+        else:
+            kpos = jnp.arange(cap)
+        out = grouped_attention(q, cache["k"], cache["v"], positions, kpos,
+                                causal=causal, window=window)
+    else:
+        if cache is not None:  # prefill: write the whole segment
+            ring = window is not None and cache["k"].shape[1] <= window
+            cache = _cache_write(cache, k, v, jnp.asarray(pos_offset), ring)
+        out = grouped_attention(q, k, v, positions, positions,
+                                causal=causal, window=window)
+
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return dense(p["wo"], out, ct), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_def(cfg: ModelConfig, tp: int = 16):
+    dh = cfg.resolved_head_dim
+    d = cfg.d_model
+    return {
+        "wq": dense_def(d, cfg.n_heads * dh, cfg, tp_out=True, tp=tp),
+        "wk": dense_def(d, cfg.n_kv_heads * dh, cfg, tp_out=True, tp=tp),
+        "wv": dense_def(d, cfg.n_kv_heads * dh, cfg, tp_out=True, tp=tp),
+        "wo": dense_def(cfg.n_heads * dh, d, cfg, tp_out=False, tp=tp),
+    }
+
+
+def cross_apply(p, x, memory, cfg: ModelConfig, *, cache=None):
+    """x: [B,Sq,D] decoder states; memory: [B,Sk,D] encoder output.
+
+    cache (optional): precomputed {k, v} over memory (decode path).
+    """
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    ct = cfg.compute_dtype
+    q = dense(p["wq"], x, ct).reshape(b, s, cfg.n_heads, dh)
+    if cache is None:
+        sk = memory.shape[1]
+        k = dense(p["wk"], memory, ct).reshape(b, sk, cfg.n_kv_heads, dh)
+        v = dense(p["wv"], memory, ct).reshape(b, sk, cfg.n_kv_heads, dh)
+    else:
+        k, v = cache["k"], cache["v"]
+        sk = k.shape[1]
+    qpos = jnp.zeros(s, jnp.int32)
+    kpos = jnp.zeros(sk, jnp.int32)
+    out = grouped_attention(q, k, v, qpos, kpos, causal=False, window=None)
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return dense(p["wo"], out, ct)
+
+
+def cross_cache(p, memory, cfg: ModelConfig):
+    """Precompute encoder-side K/V once per request (decode path)."""
+    b, sk, _ = memory.shape
+    dh = cfg.resolved_head_dim
+    ct = cfg.compute_dtype
+    k = dense(p["wk"], memory, ct).reshape(b, sk, cfg.n_kv_heads, dh)
+    v = dense(p["wv"], memory, ct).reshape(b, sk, cfg.n_kv_heads, dh)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_def(cfg: ModelConfig, tp: int = 16):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    defs = {}
+    if cfg.q_lora_rank:
+        defs["wq_a"] = dense_def(d, cfg.q_lora_rank, cfg, tp_out=True, tp=tp)
+        defs["q_norm"] = rmsnorm_def(cfg.q_lora_rank, cfg.param_dtype)
+        defs["wq_b"] = dense_def(cfg.q_lora_rank, h * qk_dim, cfg,
+                                 tp_out=True, tp=tp)
+    else:
+        defs["wq"] = dense_def(d, h * qk_dim, cfg, tp_out=True, tp=tp)
+    defs["wkv_a"] = dense_def(d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, cfg,
+                              tp_out=True, tp=tp)
+    defs["kv_norm"] = rmsnorm_def(cfg.kv_lora_rank, cfg.param_dtype)
+    defs["wkv_b"] = dense_def(
+        cfg.kv_lora_rank, h * (cfg.qk_nope_head_dim + cfg.v_head_dim), cfg,
+        tp_out=True, tp=tp)
+    defs["wo"] = dense_def(h * cfg.v_head_dim, d, cfg, tp_out=False, tp=tp)
+    return defs
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Compressed latent cache — the point of MLA: O(kv_rank + rope_dim)."""
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    ct = cfg.compute_dtype
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], dense(p["wq_a"], x, ct), cfg.norm_eps)
+        q = dense(p["wq_b"], cq, ct)
+    else:
+        q = dense(p["wq"], x, ct)
+    q = q.reshape(b, s, h, qk)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, pos_offset=0, cache=None,
+              decode: bool = False, positions=None):
+    """Returns (out, new_cache). Cache stores the compressed latents.
+
+    Train/prefill: expanded (naive) form. Decode: weight-absorbed form —
+    scores/values computed directly against the latent cache.
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    ct = cfg.compute_dtype
+    if positions is None:
+        positions = pos_offset + jnp.arange(s)
+
+    kv_a = dense(p["wkv_a"], x, ct)
+    ckv = rmsnorm(p["kv_norm"], kv_a[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    krope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                       cfg.rope_theta)[..., 0, :]          # [B,S,rope]
+
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    wkv_b = p["wkv_b"]["w"].astype(ct).reshape(
+        cfg.kv_lora_rank, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    wk_b = wkv_b[..., :cfg.qk_nope_head_dim]               # [R,H,Dn]
+    wv_b = wkv_b[..., cfg.qk_nope_head_dim:]               # [R,H,Dv]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(
+        cfg.qk_nope_head_dim + cfg.qk_rope_head_dim, jnp.float32))
+
+    if decode:
+        assert cache is not None and s == 1
+        cache = {
+            "ckv": jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, positions[0], 0)),
+            "krope": jax.lax.dynamic_update_slice(
+                cache["krope"], krope.astype(cache["krope"].dtype),
+                (0, positions[0], 0)),
+        }
+        ckv_all, krope_all = cache["ckv"], cache["krope"]
+        sk = ckv_all.shape[1]
+        # absorbed: q_nope -> latent space
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           wk_b.astype(jnp.float32))
+        sc = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_all.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           krope_all.astype(jnp.float32))) * scale
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= positions[:, None]
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_all.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b.astype(jnp.float32))
+    else:
+        if cache is not None:
+            cache = {
+                "ckv": jax.lax.dynamic_update_slice(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                    (0, pos_offset, 0)),
+                "krope": jax.lax.dynamic_update_slice(
+                    cache["krope"], krope.astype(cache["krope"].dtype),
+                    (0, pos_offset, 0)),
+            }
+        # expanded form: materialize per-head K/V from latents
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv.astype(ct), wk_b)
+        vv = jnp.einsum("bsr,rhd->bshd", ckv.astype(ct), wv_b)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (b, s, h, cfg.qk_rope_head_dim))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = grouped_attention(q_full, k_full, vv, positions, positions,
+                                causal=True, window=None)
+
+    out = out.reshape(b, s, h * cfg.v_head_dim)
+    return dense(p["wo"], out, ct), cache

@@ -1,0 +1,169 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over explicit param pytrees; param structure is
+declared via ParamDef trees (see models/param.py) so the same definition
+serves CPU smoke tests and 512-chip abstract lowering.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamDef, divisible
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(dim: int, dtype) -> ParamDef:
+    return ParamDef((dim,), init="ones", spec=P(None), dtype=dtype)
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_def(dim: int, dtype):
+    return {"scale": ParamDef((dim,), init="ones", spec=P(None), dtype=dtype),
+            "bias": ParamDef((dim,), init="zeros", spec=P(None), dtype=dtype)}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim//2] (float32)."""
+    i = jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+    return 1.0 / (theta ** (i / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh] (rotate last dim), positions: [..., S] or [S]."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                         # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]                 # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def dense_def(d_in: int, d_out: int, cfg: ModelConfig, *, tp_out: bool,
+              bias: bool = False, tp: int = 16):
+    """Weight [d_in, d_out]; tp_out: shard out-dim over 'model' (col-parallel)
+    else in-dim over 'model' (row-parallel); the other dim is FSDP 'data'."""
+    if tp_out:
+        spec = P("data" if divisible(d_in, tp) else None,
+                 "model" if divisible(d_out, tp) else None)
+        bspec = P("model" if divisible(d_out, tp) else None)
+    else:
+        spec = P("model" if divisible(d_in, tp) else None,
+                 "data" if divisible(d_out, tp) else None)
+        bspec = P(None)
+    d = {"w": ParamDef((d_in, d_out), init="scaled", spec=spec,
+                       dtype=cfg.param_dtype, fan_in=d_in)}
+    if bias:
+        d["b"] = ParamDef((d_out,), init="zeros", spec=bspec,
+                          dtype=cfg.param_dtype)
+    return d
+
+
+def dense(p, x: jax.Array, compute_dtype) -> jax.Array:
+    out = jnp.einsum("...i,io->...o", x.astype(compute_dtype),
+                     p["w"].astype(compute_dtype))
+    if "b" in p:
+        out = out + p["b"].astype(compute_dtype)
+    return out
+
+
+def mlp_def(cfg: ModelConfig, d_ff: Optional[int] = None, tp: int = 16):
+    d_ff = d_ff or cfg.d_ff
+    kind = cfg.ffn_kind
+    defs = {}
+    if kind in ("swiglu", "geglu"):
+        # §Perf: gate and up projections fused into one [D, 2, F] matmul —
+        # backward then emits ONE d_x partial all-reduce instead of two
+        # (measured on the production mesh; EXPERIMENTS.md §Perf it.2).
+        # The gate/up axis is a separate unsharded dim so the split after
+        # the matmul never crosses the model-sharded F axis.
+        defs["wi"] = {"w": ParamDef(
+            (cfg.d_model, 2, d_ff), init="scaled",
+            spec=P("data" if divisible(cfg.d_model, tp) else None, None,
+                   "model" if divisible(d_ff, tp) else None),
+            dtype=cfg.param_dtype, fan_in=cfg.d_model)}
+    else:
+        defs["wi"] = dense_def(cfg.d_model, d_ff, cfg, tp_out=True, tp=tp)
+    defs["wo"] = dense_def(d_ff, cfg.d_model, cfg, tp_out=False, tp=tp)
+    return defs
+
+
+def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        h2 = jnp.einsum("...d,dgf->...gf", x.astype(ct),
+                        p["wi"]["w"].astype(ct))
+        up, gate = h2[..., 0, :], h2[..., 1, :]
+        act = jax.nn.silu if cfg.ffn_kind == "swiglu" else jax.nn.gelu
+        h = act(up) * gate
+    else:
+        h = dense(p["wi"], x, ct)
+        h = jax.nn.gelu(h) if cfg.ffn_kind == "gelu" else jax.nn.relu(h)
+    return dense(p["wo"], h, ct)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_def(cfg: ModelConfig, tp: int = 16):
+    v = cfg.padded_vocab
+    return ParamDef((v, cfg.d_model), init="embed",
+                    spec=P("model" if divisible(v, tp) else None,
+                           "data" if divisible(cfg.d_model, tp) else None),
+                    dtype=cfg.param_dtype)
+
+
+def embed(table: jax.Array, ids: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+def unembed_def(cfg: ModelConfig, tp: int = 16):
+    v = cfg.padded_vocab
+    return ParamDef((cfg.d_model, v), init="scaled",
+                    spec=P("data" if divisible(cfg.d_model, tp) else None,
+                           "model" if divisible(v, tp) else None),
+                    dtype=cfg.param_dtype, fan_in=cfg.d_model)
+
+
+def unembed(w: jax.Array, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits in float32 (softmax numerics)."""
+    logits = jnp.einsum("...d,dv->...v", x.astype(cfg.compute_dtype),
+                        w.astype(cfg.compute_dtype)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

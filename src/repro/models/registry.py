@@ -1,0 +1,94 @@
+"""Model bundle: uniform interface over all architecture families.
+
+A ModelBundle exposes defs / loss / prefill / decode for one ModelConfig so
+the FL runtime, dry-run launcher and tests never branch on family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.param import abstract_params, init_params, param_count
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    defs: Any
+    loss: Callable                  # (params, batch) -> scalar
+    prefill: Callable               # (params, inputs, caches) -> (logits, caches)
+    decode: Callable                # (params, caches, token, pos) -> (logits, caches)
+    init_caches: Callable           # (batch, max_len) -> cache pytree
+    num_params: int = 0
+
+    def init(self, key):
+        return init_params(self.defs, key)
+
+    def abstract(self):
+        return abstract_params(self.defs)
+
+
+def _decoder_bundle(cfg: ModelConfig, tp: int, dp: int) -> ModelBundle:
+    defs = tfm.model_defs(cfg, tp, dp)
+
+    def loss(params, batch, sample_weights=None):
+        return tfm.lm_loss(params, batch, cfg, sample_weights=sample_weights)
+
+    def prefill(params, inputs, caches):
+        logits, caches, _ = tfm.forward(params, inputs, cfg, caches=caches)
+        return logits, caches
+
+    def decode(params, caches, token, pos):
+        logits, caches, _ = tfm.forward(params, token, cfg, pos_offset=pos,
+                                        caches=caches, decode=True)
+        return logits, caches
+
+    def init_caches(batch, max_len):
+        return tfm.init_caches(cfg, batch, max_len)
+
+    return ModelBundle(cfg=cfg, defs=defs, loss=loss, prefill=prefill,
+                       decode=decode, init_caches=init_caches,
+                       num_params=param_count(defs))
+
+
+def _encdec_bundle(cfg: ModelConfig, tp: int, dp: int) -> ModelBundle:
+    defs = encdec_mod.encdec_defs(cfg, tp, dp)
+
+    def loss(params, batch, sample_weights=None):
+        frames, tokens = batch
+        return encdec_mod.seq2seq_loss(params, frames, tokens, cfg,
+                                       sample_weights=sample_weights)
+
+    def prefill(params, inputs, caches):
+        """inputs = (frames, dec_tokens); returns (logits, (self, cross))."""
+        frames, dec_tokens = inputs
+        memory = encdec_mod.encode(params, frames, cfg)
+        cross = encdec_mod.build_cross_caches(params, memory, cfg)
+        logits, self_c = encdec_mod.decode_train(params, memory, dec_tokens,
+                                                 cfg, caches=caches)
+        return logits, (self_c, cross)
+
+    def decode(params, caches, token, pos):
+        self_c, cross_c = caches
+        logits, self_c = encdec_mod.decode_step(params, self_c, cross_c,
+                                                token, pos, cfg)
+        return logits, (self_c, cross_c)
+
+    def init_caches(batch, max_len):
+        return encdec_mod.init_decode_caches(cfg, batch, max_len)
+
+    return ModelBundle(cfg=cfg, defs=defs, loss=loss, prefill=prefill,
+                       decode=decode, init_caches=init_caches,
+                       num_params=param_count(defs))
+
+
+def build_bundle(cfg: ModelConfig, tp: int = 16, dp: int = 16) -> ModelBundle:
+    if cfg.is_enc_dec:
+        return _encdec_bundle(cfg, tp, dp)
+    return _decoder_bundle(cfg, tp, dp)

@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * r_t * log sigmoid(lam))  per-channel learned decay, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear given the gates, so train/prefill uses
+jax.lax.associative_scan (log-depth), and decode is a single O(1) update —
+RecurrentGemma therefore runs the long_500k shape.
+
+Block structure (Griffin recurrent block): two input linears (branch +
+gelu-gate), short causal conv on the branch, RG-LRU, multiplicative merge,
+output linear.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamDef, divisible
+
+C_FACTOR = 8.0
+CONV_K = 4
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def rglru_def(cfg: ModelConfig, tp: int = 16):
+    d, w = cfg.d_model, _width(cfg)
+    in_spec = P("data" if divisible(d, tp) else None,
+                "model" if divisible(w, tp) else None)
+    diag = P("model" if divisible(w, tp) else None)
+    return {
+        "w_branch": ParamDef((d, w), init="scaled", spec=in_spec,
+                             dtype=cfg.param_dtype, fan_in=d),
+        "w_gate": ParamDef((d, w), init="scaled", spec=in_spec,
+                           dtype=cfg.param_dtype, fan_in=d),
+        "conv_w": ParamDef((CONV_K, w), init="scaled", spec=P(None, None),
+                           dtype=cfg.param_dtype, fan_in=CONV_K),
+        "conv_b": ParamDef((w,), init="zeros", spec=P(None),
+                           dtype=cfg.param_dtype),
+        "w_a": ParamDef((w, w), init="scaled", spec=P(None, None) if w > 4096
+                        else P(None, None), dtype=cfg.param_dtype, fan_in=w),
+        "b_a": ParamDef((w,), init="zeros", spec=diag, dtype=cfg.param_dtype),
+        "w_x": ParamDef((w, w), init="scaled", spec=P(None, None),
+                        dtype=cfg.param_dtype, fan_in=w),
+        "b_x": ParamDef((w,), init="zeros", spec=diag, dtype=cfg.param_dtype),
+        "lam": ParamDef((w,), init="ones", spec=diag, dtype=jnp.float32),
+        "w_out": ParamDef((w, d), init="scaled",
+                          spec=P("model" if divisible(w, tp) else None,
+                                 "data" if divisible(d, tp) else None),
+                          dtype=cfg.param_dtype, fan_in=w),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, CONV_K - 1, w), dtype),
+    }
+
+
+def _gates(p, x):
+    """x [.., W] -> (log_a, gated_input) in float32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32)
+                       + p["b_x"].astype(jnp.float32))
+    log_a = C_FACTOR * r * jax.nn.log_sigmoid(p["lam"])    # <= 0
+    gated = i * xf
+    return log_a, gated
+
+
+def _lru_scan(log_a, gated, h0):
+    """Linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t over axis 1."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh[:, 1:] if h0 is not None else hh
+
+
+def rglru_apply(p, x, cfg: ModelConfig, *, state=None, decode: bool = False):
+    """x [B,S,D] -> (y [B,S,D], new_state)."""
+    bsz, s, d = x.shape
+    w = _width(cfg)
+    ct = cfg.compute_dtype
+
+    branch = jnp.einsum("bsd,dw->bsw", x.astype(ct), p["w_branch"].astype(ct))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x.astype(ct),
+                                  p["w_gate"].astype(ct)))
+
+    cw = p["conv_w"].astype(jnp.float32)
+    cb = p["conv_b"].astype(jnp.float32)
+    if decode:
+        assert state is not None and s == 1
+        conv_in = jnp.concatenate(
+            [state["conv"], branch.astype(state["conv"].dtype)], axis=1)
+        new_conv = conv_in[:, 1:, :]
+        z = jnp.einsum("bkw,kw->bw", conv_in.astype(jnp.float32), cw) + cb
+        log_a, gated = _gates(p, z)
+        a = jnp.exp(log_a)
+        h = (a * state["h"].astype(jnp.float32)
+             + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated)
+        y = h[:, None, :]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        pad = jnp.pad(branch.astype(jnp.float32), ((0, 0), (CONV_K - 1, 0),
+                                                   (0, 0)))
+        z = sum(pad[:, i:i + s, :] * cw[i][None, None, :]
+                for i in range(CONV_K)) + cb
+        log_a, gated = _gates(p, z)
+        h0 = state["h"].astype(jnp.float32) if state is not None else None
+        h = _lru_scan(log_a, gated, h0)
+        y = h
+        if state is not None:
+            new_state = {"h": h[:, -1, :],
+                         "conv": branch[:, -(CONV_K - 1):, :].astype(
+                             state["conv"].dtype)}
+        else:
+            new_state = None
+
+    y = y.astype(ct) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(ct))
+    return out, new_state

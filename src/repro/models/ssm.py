@@ -1,0 +1,237 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Chunked SSD algorithm (arXiv:2405.21060): the sequence is split into chunks
+of length Q; within a chunk the quadratic (attention-like) form runs on the
+MXU; across chunks a linear recurrence carries the [H, P, N] state.  Decode
+is a single O(1) state update — this is why mamba2 runs the long_500k shape.
+
+Layer structure (mamba_ssm reference): in_proj -> (z, xBC, dt);
+causal depthwise conv over xBC; SSD core; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import ParamDef, divisible
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def ssd_def(cfg: ModelConfig, tp: int = 16):
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    n, g = cfg.ssm_state, cfg.ssm_ngroups
+    d_in_proj = 2 * d_inner + 2 * g * n + nheads
+    return {
+        "in_proj": ParamDef((d, d_in_proj), init="scaled",
+                            spec=P("data" if divisible(d, tp) else None,
+                                   "model" if divisible(d_in_proj, tp) else None),
+                            dtype=cfg.param_dtype, fan_in=d),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), init="scaled",
+                           spec=P(None, None), dtype=cfg.param_dtype,
+                           fan_in=cfg.ssm_conv),
+        "conv_b": ParamDef((conv_dim,), init="zeros", spec=P(None),
+                           dtype=cfg.param_dtype),
+        "a_log": ParamDef((nheads,), init="zeros", spec=P(None),
+                          dtype=jnp.float32),
+        "dt_bias": ParamDef((nheads,), init="zeros", spec=P(None),
+                            dtype=jnp.float32),
+        "d_skip": ParamDef((nheads,), init="ones", spec=P(None),
+                           dtype=jnp.float32),
+        "norm": ParamDef((d_inner,), init="ones", spec=P(None),
+                         dtype=cfg.param_dtype),
+        "out_proj": ParamDef((d_inner, d), init="scaled",
+                             spec=P("model" if divisible(d_inner, tp) else None,
+                                    "data" if divisible(d, tp) else None),
+                             dtype=cfg.param_dtype, fan_in=d_inner),
+    }
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_headdim, cfg.ssm_state),
+                         dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """xbc [B,L,C]; depthwise causal conv, kernel [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_inner, nheads, _ = _dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], -1)
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a_neg, b_mat, c_mat, chunk: int, state0=None):
+    """Core SSD scan.
+
+    x [B,L,H,P]; dt [B,L,H] (>0); a_neg [H] (negative);
+    b_mat, c_mat [B,L,G,N] (G divides H).
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).
+    """
+    bsz, l, h, p_dim = x.shape
+    g = b_mat.shape[2]
+    n = b_mat.shape[3]
+    assert l % chunk == 0, f"L={l} % chunk={chunk}"
+    nc = l // chunk
+    rep = h // g
+
+    # per-step log decay
+    dA = dt * a_neg[None, None, :]                      # [B,L,H] (<0)
+    xw = x * dt[..., None]                              # dt-weighted input
+
+    def resh(t, extra):
+        return t.reshape((bsz, nc, chunk) + extra)
+
+    xw_c = resh(xw, (h, p_dim))
+    dA_c = resh(dA, (h,))
+    b_c = resh(b_mat, (g, n))
+    c_c = resh(c_mat, (g, n))
+
+    cum = jnp.cumsum(dA_c, axis=2)                      # [B,NC,Q,H]
+    seg_end = cum[:, :, -1:, :]                         # total chunk decay
+
+    # ---- intra-chunk (quadratic / MXU) ----
+    # att[i,j] = exp(cum_i - cum_j) * (C_i . B_j), i >= j
+    bh_c = jnp.repeat(b_c, rep, axis=3) if g != h else b_c   # [B,NC,Q,H,N]
+    ch_c = jnp.repeat(c_c, rep, axis=3) if g != h else c_c
+    scores = jnp.einsum("bcihn,bcjhn->bchij", ch_c.astype(jnp.float32),
+                        bh_c.astype(jnp.float32))
+    decay = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3)     # [B,NC,H,Q(i),Q(j)]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(mask[None, None, None], scores * jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att, xw_c.astype(jnp.float32))
+
+    # ---- chunk states ----
+    # S_c(local) = sum_j exp(seg_end - cum_j) * B_j (x) xw_j   [B,NC,H,P,N]
+    w_in = jnp.exp(seg_end - cum)                        # [B,NC,Q,H]
+    s_local = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                         w_in, bh_c.astype(jnp.float32),
+                         xw_c.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence: S_k = exp(seg_end_k) S_{k-1} + local_k ----
+    seg_decay = jnp.exp(seg_end[:, :, 0, :])             # [B,NC,H]
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+
+    def step(s_prev, inp):
+        dec, loc = inp                                   # [B,H], [B,H,P,N]
+        s_new = s_prev * dec[..., None, None] + loc
+        return s_new, s_prev                             # emit state *entering* chunk
+
+    dec_t = seg_decay.transpose(1, 0, 2)                 # [NC,B,H]
+    loc_t = s_local.transpose(1, 0, 2, 3, 4)             # [NC,B,H,P,N]
+    final_state, s_in = jax.lax.scan(step, state0.astype(jnp.float32),
+                                     (dec_t, loc_t))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                 # [B,NC,H,P,N]
+
+    # ---- inter-chunk output: y_i += C_i . (exp(cum_i) * S_in) ----
+    w_out = jnp.exp(cum)                                 # [B,NC,Q,H]
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp",
+                         ch_c.astype(jnp.float32), s_in, w_out)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p_dim)
+    return y, final_state
+
+
+def ssd_apply(p, x, cfg: ModelConfig, *, state=None, decode: bool = False):
+    """Mamba-2 mixer. x [B,S,D] -> (y [B,S,D], new_state)."""
+    bsz, s, d = x.shape
+    d_inner, nheads, conv_dim = _dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    hd = cfg.ssm_headdim
+    ct = cfg.compute_dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x.astype(ct), p["in_proj"].astype(ct))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])   # [B,S,H]
+    a_neg = -jnp.exp(p["a_log"])                          # [H] < 0
+
+    if decode:
+        assert state is not None and s == 1
+        # conv ring: shift in the new xBC row
+        conv_in = jnp.concatenate([state["conv"],
+                                   xbc.astype(state["conv"].dtype)], axis=1)
+        new_conv = conv_in[:, 1:, :]
+        w = p["conv_w"].astype(jnp.float32)
+        xbc_t = jax.nn.silu(jnp.einsum("bkc,kc->bc",
+                                       conv_in.astype(jnp.float32), w)
+                            + p["conv_b"].astype(jnp.float32))
+        xs, b_t, c_t = jnp.split(xbc_t, [d_inner, d_inner + g * n], -1)
+        xh = xs.reshape(bsz, nheads, hd)
+        b_t = b_t.reshape(bsz, g, n)
+        c_t = c_t.reshape(bsz, g, n)
+        rep = nheads // g
+        bh = jnp.repeat(b_t, rep, axis=1)                 # [B,H,N]
+        chh = jnp.repeat(c_t, rep, axis=1)
+        dt1 = dt[:, 0, :]                                 # [B,H]
+        da = jnp.exp(dt1 * a_neg[None, :])                # [B,H]
+        s_new = (state["ssm"] * da[..., None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt1, bh,
+                              xh.astype(jnp.float32)))
+        y = jnp.einsum("bhn,bhpn->bhp", chh, s_new)
+        y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, 1, d_inner)
+        new_state = {"ssm": s_new, "conv": new_conv}
+    else:
+        xbc_conv = _causal_conv(xbc.astype(jnp.float32),
+                                p["conv_w"].astype(jnp.float32),
+                                p["conv_b"].astype(jnp.float32))
+        xs, b_mat, c_mat = jnp.split(xbc_conv, [d_inner, d_inner + g * n], -1)
+        xh = xs.reshape(bsz, s, nheads, hd)
+        b_mat = b_mat.reshape(bsz, s, g, n)
+        c_mat = c_mat.reshape(bsz, s, g, n)
+        state0 = state["ssm"] if state is not None else None
+        # pad to a chunk multiple; dt = 0 on padding keeps the state exact
+        # (decay exp(0)=1, input weight dt=0)
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            xh_p = jnp.pad(xh, pad4)
+            b_p = jnp.pad(b_mat, pad4)
+            c_p = jnp.pad(c_mat, pad4)
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, b_p, c_p, dt_p = xh, b_mat, c_mat, dt
+        y, s_fin = ssd_chunked(xh_p, dt_p, a_neg, b_p, c_p, chunk,
+                               state0=state0)
+        y = y[:, :s]
+        y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, s, d_inner)
+        new_conv = None
+        if state is not None:  # prefill: stash trailing conv window
+            k = cfg.ssm_conv - 1
+            new_conv = xbc[:, -k:, :].astype(state["conv"].dtype)
+            new_state = {"ssm": s_fin, "conv": new_conv}
+        else:
+            new_state = None
+
+    # gated RMSNorm + out projection
+    y = y.astype(ct) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y.astype(ct), p["out_proj"].astype(ct))
+    return out, new_state

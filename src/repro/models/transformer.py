@@ -1,0 +1,356 @@
+"""Decoder-only transformer assembler for all assigned families.
+
+Layers are grouped by repeating block signature and executed with
+jax.lax.scan over stacked parameters (+ per-layer remat), so the HLO stays
+O(one pattern unit) even for 61-layer configs — essential for 80 AOT
+compiles on one CPU core.
+
+Supported mixers (cfg.block_pattern): attn | swa | local | rglru | ssd.
+FFN per layer: dense MLP, MoE (after cfg.moe_first_dense), or none (mamba2).
+Optional MTP (DeepSeek-V3 multi-token prediction) head at training time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import distributed as dist
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed, embedding_def, mlp, mlp_def, rmsnorm,
+                                 rmsnorm_def, unembed, unembed_def)
+from repro.models.param import ParamDef, is_def
+
+# ---------------------------------------------------------------------------
+# Layer signatures and grouping
+# ---------------------------------------------------------------------------
+
+
+def _layer_sig(cfg: ModelConfig, idx: int, kinds) -> tuple:
+    kind = kinds[idx]
+    if kind == "ssd" and cfg.ffn_kind == "none":
+        ffn = "none"
+    elif cfg.layer_is_moe(idx):
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    return (kind, ffn)
+
+
+def layer_plan(cfg: ModelConfig, n_layers: Optional[int] = None):
+    """Split layers into (lead_sigs, unit_sigs, n_rep, tail_sigs).
+
+    lead = leading layers that do not fit the repeating unit (e.g. DeepSeek's
+    dense-FFN head layers); unit repeats n_rep times; tail is the remainder.
+    """
+    n = n_layers if n_layers is not None else cfg.n_layers
+    kinds = cfg.block_kinds(n)
+    sigs = [_layer_sig(cfg, i, kinds) for i in range(n)]
+    lead = cfg.moe_first_dense if cfg.moe_num_experts else 0
+    lead = min(lead, n)
+    unit_len = len(cfg.block_pattern)
+    body = sigs[lead:]
+    if not body:
+        return sigs, [], 0, []
+    unit = body[:unit_len]
+    n_rep = 0
+    pos = 0
+    while pos + unit_len <= len(body) and body[pos:pos + unit_len] == unit:
+        n_rep += 1
+        pos += unit_len
+    return sigs[:lead], unit, n_rep, body[pos:]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer parameter defs
+# ---------------------------------------------------------------------------
+
+def _mixer_def(cfg: ModelConfig, kind: str, tp: int):
+    if kind in ("attn", "swa", "local", "enc_attn"):
+        if cfg.attn_kind == "mla":
+            return attn_mod.mla_def(cfg, tp)
+        return attn_mod.gqa_def(cfg, tp)
+    if kind == "ssd":
+        return ssm_mod.ssd_def(cfg, tp)
+    if kind == "rglru":
+        return rglru_mod.rglru_def(cfg, tp)
+    raise ValueError(f"unknown mixer kind {kind!r}")
+
+
+def layer_def(cfg: ModelConfig, sig: tuple, tp: int = 16, dp: int = 16,
+              cross: bool = False):
+    kind, ffn = sig
+    d = {"ln1": rmsnorm_def(cfg.d_model, cfg.param_dtype),
+         "mixer": _mixer_def(cfg, kind, tp)}
+    if cross:
+        d["ln_cross"] = rmsnorm_def(cfg.d_model, cfg.param_dtype)
+        d["cross"] = attn_mod.cross_def(cfg, tp)
+    if ffn != "none":
+        d["ln2"] = rmsnorm_def(cfg.d_model, cfg.param_dtype)
+        d["ffn"] = (moe_mod.moe_def(cfg, tp, dp) if ffn == "moe"
+                    else mlp_def(cfg, tp=tp))
+    return d
+
+
+def _stack_defs(defs, n: int):
+    def stack_one(d: ParamDef) -> ParamDef:
+        fan = d.fan_in
+        if fan is None and d.init in ("normal", "scaled"):
+            fan = d.shape[-2] if len(d.shape) >= 2 else max(1, d.shape[-1])
+        return ParamDef((n,) + d.shape, init=d.init,
+                        spec=P(*((None,) + tuple(d.spec))), dtype=d.dtype,
+                        fan_in=fan)
+    return jax.tree.map(stack_one, defs, is_leaf=is_def)
+
+
+def model_defs(cfg: ModelConfig, tp: int = 16, dp: int = 16):
+    """Full parameter-definition tree for a decoder-only LM."""
+    lead, unit, n_rep, tail = layer_plan(cfg)
+    defs: dict = {}
+    if cfg.input_mode == "tokens":
+        defs["embed"] = embedding_def(cfg, tp)
+    defs["lead"] = [layer_def(cfg, s, tp, dp) for s in lead]
+    if n_rep:
+        unit_defs = {f"u{i}": layer_def(cfg, s, tp, dp)
+                     for i, s in enumerate(unit)}
+        defs["scan"] = _stack_defs(unit_defs, n_rep)
+    defs["tail"] = [layer_def(cfg, s, tp, dp) for s in tail]
+    defs["ln_f"] = rmsnorm_def(cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = unembed_def(cfg, tp)
+    if cfg.mtp_depth:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * cfg.d_model, cfg.d_model), init="scaled",
+                             spec=P(None, "data"), dtype=cfg.param_dtype,
+                             fan_in=2 * cfg.d_model),
+            "ln_in": rmsnorm_def(cfg.d_model, cfg.param_dtype),
+            "layer": layer_def(cfg, ("attn", "dense"), tp, dp),
+            "ln_out": rmsnorm_def(cfg.d_model, cfg.param_dtype),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+
+def _mixer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "swa", "local"):
+        if cfg.attn_kind == "mla":
+            return attn_mod.init_mla_cache(cfg, batch, max_len)
+        return attn_mod.init_kv_cache(cfg, batch, max_len, kind)
+    if kind == "ssd":
+        return ssm_mod.init_ssd_state(cfg, batch)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree matching the layer grouping (lead/scan/tail)."""
+    lead, unit, n_rep, tail = layer_plan(cfg)
+    caches: dict = {}
+    caches["lead"] = [_mixer_cache(cfg, s[0], batch, max_len) for s in lead]
+    if n_rep:
+        unit_caches = {f"u{i}": _mixer_cache(cfg, s[0], batch, max_len)
+                       for i, s in enumerate(unit)}
+        caches["scan"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape).copy(),
+            unit_caches)
+    caches["tail"] = [_mixer_cache(cfg, s[0], batch, max_len) for s in tail]
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(p, h, cfg: ModelConfig, kind: str, *, pos_offset, cache,
+                 decode):
+    if kind in ("attn", "swa", "local", "enc_attn"):
+        if cfg.attn_kind == "mla":
+            return attn_mod.mla_apply(p, h, cfg, pos_offset=pos_offset,
+                                      cache=cache, decode=decode)
+        return attn_mod.gqa_apply(p, h, cfg, kind=kind,
+                                  pos_offset=pos_offset, cache=cache,
+                                  decode=decode)
+    if kind == "ssd":
+        return ssm_mod.ssd_apply(p, h, cfg, state=cache, decode=decode)
+    if kind == "rglru":
+        return rglru_mod.rglru_apply(p, h, cfg, state=cache, decode=decode)
+    raise ValueError(kind)
+
+
+def apply_layer(p, x, cfg: ModelConfig, sig: tuple, *, pos_offset=0,
+                cache=None, decode=False, memory=None, cross_cache=None):
+    """One transformer block. Returns (x, new_cache, aux)."""
+    kind, ffn = sig
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    mix, new_cache = _apply_mixer(p["mixer"], h, cfg, kind,
+                                  pos_offset=pos_offset, cache=cache,
+                                  decode=decode)
+    x = x + mix
+    if "cross" in p and (memory is not None or cross_cache is not None):
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_apply(p["cross"], hc, memory, cfg,
+                                     cache=cross_cache)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        else:
+            y = mlp(p["ffn"], h2, cfg)
+        x = x + y
+    x = dist.constrain(x, (dist.batch_logical(), "seq", None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg: ModelConfig, *, pos_offset, caches, decode):
+    """Lead (unrolled) -> scan groups -> tail (unrolled)."""
+    lead, unit, n_rep, tail = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {"lead": [], "tail": []}
+
+    for i, sig in enumerate(lead):
+        c = caches["lead"][i] if caches is not None else None
+        x, nc, aux = jax.checkpoint(
+            lambda p_, x_, c_, sig_=sig: apply_layer(
+                p_, x_, cfg, sig_, pos_offset=pos_offset, cache=c_,
+                decode=decode))(params["lead"][i], x, c)
+        new_caches["lead"].append(nc)
+        aux_total = aux_total + aux
+
+    if n_rep:
+        scan_caches = caches["scan"] if caches is not None else None
+
+        def body(carry, xs):
+            xc, aux_c = carry
+            p_unit, c_unit = xs
+            ncs = {}
+            for i, sig in enumerate(unit):
+                key = f"u{i}"
+                c = c_unit[key] if c_unit is not None else None
+                xc, nc, aux = apply_layer(p_unit[key], xc, cfg, sig,
+                                          pos_offset=pos_offset, cache=c,
+                                          decode=decode)
+                ncs[key] = nc
+                aux_c = aux_c + aux
+            return (xc, aux_c), ncs
+
+        body_ckpt = jax.checkpoint(body)
+        (x, aux_total), scan_nc = jax.lax.scan(
+            body_ckpt, (x, aux_total), (params["scan"], scan_caches))
+        new_caches["scan"] = scan_nc
+
+    for i, sig in enumerate(tail):
+        c = caches["tail"][i] if caches is not None else None
+        x, nc, aux = jax.checkpoint(
+            lambda p_, x_, c_, sig_=sig: apply_layer(
+                p_, x_, cfg, sig_, pos_offset=pos_offset, cache=c_,
+                decode=decode))(params["tail"][i], x, c)
+        new_caches["tail"].append(nc)
+        aux_total = aux_total + aux
+
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def forward(params, inputs, cfg: ModelConfig, *, pos_offset=0, caches=None,
+            decode=False, return_hidden=False):
+    """inputs: int tokens [B,S] (input_mode=tokens) or embeddings [B,S,D].
+
+    Returns (logits [B,S,V], new_caches, aux).
+    """
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], inputs, cfg.compute_dtype)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    x = dist.constrain(x, (dist.batch_logical(), "seq", None))
+
+    x, new_caches, aux = _run_stack(params, x, cfg, pos_offset=pos_offset,
+                                    caches=caches, decode=decode)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"].T, h, cfg)
+    else:
+        logits = unembed(params["unembed"], h, cfg)
+    if return_hidden:
+        return logits, new_caches, aux, h
+    return logits, new_caches, aux
+
+
+def mtp_logits(params, h, tokens, cfg: ModelConfig):
+    """DeepSeek-V3 MTP: predict token t+2 from (h_t, emb(token_{t+1})).
+
+    h: [B,S,D] final hidden; tokens: [B,S]. Returns logits [B,S-1,V]
+    aligned so position i predicts tokens[i+2].
+    """
+    p = params["mtp"]
+    emb_next = embed(params["embed"], tokens[:, 1:], cfg.compute_dtype)
+    h_in = rmsnorm(p["ln_in"], h[:, :-1], cfg.norm_eps)
+    fused = jnp.concatenate([h_in, emb_next], axis=-1)
+    x = jnp.einsum("bsk,kd->bsd", fused, p["proj"].astype(cfg.compute_dtype))
+    x, _, _ = apply_layer(p["layer"], x, cfg, ("attn", "dense"))
+    h_out = rmsnorm(p["ln_out"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return unembed(params["embed"].T, h_out, cfg)
+    return unembed(params["unembed"], h_out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, vocab_size: int, sample_weights=None):
+    """Mean cross-entropy, ignoring label == -1. logits fp32 [B, S, V].
+
+    sample_weights [B] (optional): per-sample loss weights — the pjit-native
+    OTA-FL formulation rides these (core/ota.per_client_loss_weights).
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    if sample_weights is not None:
+        w = sample_weights.astype(jnp.float32)
+        per_sample = jnp.sum(nll, axis=-1) / jnp.maximum(
+            jnp.sum(mask, axis=-1), 1)
+        return jnp.mean(w * per_sample)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def lm_loss(params, tokens, cfg: ModelConfig, labels=None,
+            sample_weights=None):
+    """Next-token LM loss (+ router aux + optional MTP)."""
+    if labels is None:
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    else:
+        inputs = tokens
+    need_h = bool(cfg.mtp_depth)
+    out = forward(params, inputs, cfg, return_hidden=need_h)
+    logits, _, aux = out[0], out[1], out[2]
+    loss = softmax_xent(logits, labels, cfg.padded_vocab, sample_weights)
+    if cfg.moe_num_experts:
+        loss = loss + cfg.router_aux_weight * aux
+    if cfg.mtp_depth:
+        h = out[3]
+        mtp_lg = mtp_logits(params, h, inputs, cfg)
+        mtp_labels = labels[:, 2:] if labels.shape[1] > 2 else labels[:, :0]
+        mtp_lg = mtp_lg[:, :mtp_labels.shape[1]]
+        if mtp_labels.shape[1] > 0:
+            loss = loss + cfg.mtp_loss_weight * softmax_xent(
+                mtp_lg, mtp_labels, cfg.padded_vocab, sample_weights)
+    return loss

@@ -1,0 +1,115 @@
+"""Pytree optimizers (no optax in this container).
+
+The paper's method is plain SGD (eq. (7)); momentum and AdamW are provided
+for the non-paper training paths.  API mirrors optax: (init, update) where
+update returns (new_params, new_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]     # (grads, state, params, lr?) -> (params, state)
+    name: str = "opt"
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr_now: Optional[float] = None):
+        step = lr_now if lr_now is not None else lr
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - step * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def sgd_momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _zeros_like_f32(params)
+
+    def update(grads, state, params, lr_now: Optional[float] = None):
+        step = lr_now if lr_now is not None else lr
+        new_m = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - step * m).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update, "sgd_momentum")
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdamState(_zeros_like_f32(params), _zeros_like_f32(params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr_now: Optional[float] = None):
+        step = lr_now if lr_now is not None else lr
+        cnt = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** cnt.astype(jnp.float32)
+        bc2 = 1 - b2 ** cnt.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step * delta).astype(p.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), AdamState(mu, nu, cnt)
+
+    return Optimizer(init, update, "adamw")
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    """Scale grads so that the global l2 norm is <= max_norm.
+
+    Used to enforce Assumption 2 (||g_m|| <= G_max) on the FL clients.
+    """
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "sgd_momentum":
+        return sgd_momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

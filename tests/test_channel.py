@@ -1,0 +1,60 @@
+"""Wireless channel model: statistics and units."""
+import numpy as np
+import pytest
+
+from repro.core import channel
+
+
+def test_path_loss_reference():
+    assert channel.path_loss_db(1.0) == pytest.approx(50.0)
+    # +22 dB per decade (exponent 2.2)
+    assert (channel.path_loss_db(100.0)
+            - channel.path_loss_db(10.0)) == pytest.approx(22.0)
+
+
+def test_physical_constants():
+    cfg = channel.WirelessConfig()
+    assert cfg.ptx_watt == pytest.approx(1e-3)          # 0 dBm
+    assert cfg.energy_per_sample == pytest.approx(1e-9)  # Ptx/B
+    assert cfg.noise_psd == pytest.approx(10 ** (-17.3), rel=1e-6)
+
+
+def test_deploy_deterministic():
+    cfg = channel.WirelessConfig(num_devices=10, seed=3)
+    d1, d2 = channel.deploy(cfg), channel.deploy(cfg)
+    assert np.array_equal(d1.distances, d2.distances)
+    assert np.all(d1.distances <= cfg.r_max)
+    assert np.all(d1.distances >= 1.0)
+
+
+def test_fading_second_moment():
+    """E|h|^2 = Lambda under CN(0, Lambda)."""
+    gains = np.array([1e-12, 5e-12, 2e-11])
+    rng = np.random.default_rng(0)
+    h = channel.draw_fading(rng, gains, num_rounds=200_000)
+    emp = np.mean(np.abs(h) ** 2, axis=0)
+    assert np.allclose(emp, gains, rtol=0.02)
+
+
+def test_fading_quantile_matches_rayleigh():
+    gains = np.array([1e-12])
+    rng = np.random.default_rng(1)
+    h = np.abs(channel.draw_fading(rng, gains, num_rounds=200_000))[:, 0]
+    for q in (0.1, 0.5, 0.9):
+        xq = channel.fading_magnitude_quantile(gains, q)[0]
+        assert np.mean(h <= xq) == pytest.approx(q, abs=0.01)
+
+
+def test_truncation_probability_matches_theory():
+    """P(chi=1) = exp(-thr^2/Lambda) — the alpha_m formula's core."""
+    from repro.core import theory
+    from tests.test_theory import make_prm
+    gains = np.array([1e-12, 4e-12])
+    prm = make_prm(gains)
+    gamma = 0.7 * theory.gamma_max(prm)
+    thr = theory.chi_threshold(gamma, prm)
+    rng = np.random.default_rng(2)
+    h = np.abs(channel.draw_fading(rng, gains, num_rounds=300_000))
+    emp = (h >= thr[None, :]).mean(axis=0)
+    assert np.allclose(emp, theory.expected_participation_indicator(gamma, prm),
+                       atol=0.01)

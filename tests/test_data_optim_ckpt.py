@@ -1,0 +1,125 @@
+"""Data pipeline, optimizers, checkpoint substrates."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data import partition, synthetic
+from repro.optim.optimizers import (adamw, clip_by_global_norm, get_optimizer,
+                                    sgd, sgd_momentum)
+from repro.optim.schedules import warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_mnist_like_deterministic_and_separable():
+    x1, y1, xt, yt = synthetic.mnist_like(100, seed=0)
+    x2, y2, _, _ = synthetic.mnist_like(100, seed=0)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    assert x1.shape == (1000, 784) and xt.shape == (1000, 784)
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+    # nearest-template classification must beat chance by a lot
+    centroids = np.stack([x1[y1 == c].mean(0) for c in range(10)])
+    pred = np.argmin(((xt[:, None] - centroids[None]) ** 2).sum(-1), axis=1)
+    assert (pred == yt).mean() > 0.6
+
+
+def test_partition_paper_protocol():
+    x, y, _, _ = synthetic.mnist_like(100, seed=0)
+    shards = partition.partition_by_label(x, y, 10, labels_per_device=2,
+                                          max_devices_per_label=2)
+    assert len(shards) == 10
+    label_owner_count = np.zeros(10, int)
+    for xm, ym in shards:
+        labs = np.unique(ym)
+        assert len(labs) == 2                     # exactly two digits
+        for l in labs:
+            label_owner_count[l] += 1
+        assert len(ym) == 100                     # equal split
+    assert np.all(label_owner_count <= 2)         # <= 2 devices per label
+    # partition covers every sample exactly once
+    total = sum(len(ym) for _, ym in shards)
+    assert total == len(y)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10))
+def test_label_assignment_property(n_dev):
+    assign = partition.label_assignment(n_dev, 10, 2, 2)
+    counts = np.zeros(10, int)
+    for labs in assign:
+        assert len(set(labs)) == 2
+        for l in labs:
+            counts[l] += 1
+    assert counts.max() <= 2
+
+
+def test_token_stream():
+    t = synthetic.token_stream(10000, 100, seed=1)
+    assert t.shape == (10000,) and t.min() >= 0 and t.max() < 100
+    # Zipf: most common token should dominate
+    assert np.bincount(t).max() > 500
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "sgd_momentum", "adamw"])
+def test_optimizer_quadratic_convergence(name):
+    opt = get_optimizer(name, lr=0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(100) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 5.0)
+    total = jnp.sqrt(sum(jnp.sum(l ** 2) for l in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(5.0, rel=1e-5)
+    assert float(norm) == pytest.approx(100.0)
+    # norms below the cap are untouched
+    g2 = {"a": jnp.ones(4) * 0.1}
+    c2, _ = clip_by_global_norm(g2, 5.0)
+    assert jnp.allclose(c2["a"], g2["a"])
+
+
+def test_warmup_cosine_schedule():
+    fn = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(fn(0)) == 0.0
+    assert float(fn(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(fn(100)) == pytest.approx(0.1, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = {"layer": {"w": jax.random.normal(key, (4, 8)),
+                      "b": jnp.zeros(8)},
+            "stack": [jnp.ones(3), jnp.arange(5)]}
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, tree, meta={"step": 7})
+    restored = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.load_meta(path)["step"] == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, key):
+    tree = {"w": jnp.zeros((2, 2))}
+    path = os.path.join(tmp_path, "ck2")
+    ckpt.save(path, tree)
+    with pytest.raises(ValueError):
+        ckpt.restore(path, {"w": jnp.zeros((3, 3))})

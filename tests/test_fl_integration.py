@@ -1,0 +1,72 @@
+"""End-to-end FL behaviour on the paper's task (reduced rounds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, power_control as pcm
+from repro.data import partition, synthetic
+from repro.fl.server import FLRunConfig, make_round_fn, run_fl
+from repro.models import mlp
+from repro.models.param import init_params
+from tests.test_theory import make_prm
+
+
+@pytest.fixture(scope="module")
+def world():
+    wcfg = channel.WirelessConfig(num_devices=10, seed=0)
+    dep = channel.deploy(wcfg)
+    x, y, xt, yt = synthetic.mnist_like(120, seed=0)
+    shards = partition.partition_by_label(x, y, 10, seed=0)
+    xd, yd = partition.stack_shards(shards)
+    prm = make_prm(dep.gains, d=mlp.PARAM_DIM)
+    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(0))
+    return dep, prm, (xd, yd), (xt, yt), params0
+
+
+def _eval(xt, yt):
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+
+    @jax.jit
+    def fn(params):
+        return {"acc": mlp.accuracy(params, xt, yt)}
+    return fn
+
+
+def test_paper_dimension():
+    assert mlp.PARAM_DIM == 814090                 # paper's d
+
+
+@pytest.mark.parametrize("scheme", ["ideal", "sca"])
+def test_fl_learns(world, scheme):
+    dep, prm, data, (xt, yt), params0 = world
+    pc = pcm.make_power_control(scheme, dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=40, eval_every=39)
+    _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data, run,
+                     _eval(xt, yt))
+    assert hist[-1]["acc"] > 0.8, hist
+
+
+def test_interior_scheduler_generalizes_worse(world):
+    """BB-FL Interior misses labels under non-iid split (paper Fig. 2)."""
+    dep, prm, data, (xt, yt), params0 = world
+    run = FLRunConfig(eta=0.05, num_rounds=40, eval_every=39)
+    accs = {}
+    for scheme in ["sca", "bbfl_interior"]:
+        pc = pcm.make_power_control(scheme, dep, prm)
+        _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data, run,
+                         _eval(xt, yt))
+        accs[scheme] = hist[-1]["acc"]
+    assert accs["bbfl_interior"] < accs["sca"] - 0.2
+
+
+def test_round_fn_clips_to_gmax(world):
+    dep, prm, data, _, params0 = world
+    pc = pcm.make_power_control("ideal", dep, prm)
+    run = FLRunConfig(eta=0.05, gmax=10.0)
+    round_fn = make_round_fn(mlp.mlp_loss, pc, dep.gains, run)
+    xd, yd = data
+    _, metrics = round_fn(params0, (jnp.asarray(xd), jnp.asarray(yd)),
+                          jax.random.PRNGKey(0))
+    assert float(metrics["grad_norm_mean"]) > 0.0
+    assert float(metrics["active_devices"]) == 10.0

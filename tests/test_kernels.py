@@ -1,0 +1,166 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    # bf16: the kernel accumulates in fp32, the oracle in bf16 — the kernel
+    # is the more accurate side, so tolerance covers oracle rounding
+    return dict(rtol=6e-2, atol=6e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ota_aggregate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 10, 32])
+@pytest.mark.parametrize("d", [128, 1024, 5000, 65536])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ota_aggregate_sweep(n, d, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    g = jax.random.normal(k1, (n, d), dtype)
+    s = jax.random.uniform(k2, (n,), jnp.float32)
+    z = jax.random.normal(k3, (d,), jnp.float32)
+    out = ops.ota_aggregate(g, s, z, jnp.float32(0.25))
+    exp = ref.ota_aggregate_ref(g, s, z, jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 2000), st.integers(0, 2**31 - 1))
+def test_ota_aggregate_property(n, d, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    g = jax.random.normal(k1, (n, d))
+    s = jax.random.uniform(k2, (n,))
+    z = jax.random.normal(k3, (d,))
+    out = ops.ota_aggregate(g, s, z, jnp.float32(0.0))
+    exp = ref.ota_aggregate_ref(g, s, z, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk", [(128, 128), (256, 256), (64, 256),
+                                   (1, 512), (100, 100)])
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(sq, sk, h, kh, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    dh = 64
+    q = jax.random.normal(k1, (2, sq, h, dh), dtype)
+    k = jax.random.normal(k2, (2, sk, kh, dh), dtype)
+    v = jax.random.normal(k3, (2, sk, kh, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64, 128])
+def test_flash_attention_window(window):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 256, 4, 32))
+    k = jax.random.normal(k2, (1, 256, 2, 32))
+    v = jax.random.normal(k3, (1, 256, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    exp = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 128, 2, 32))
+    k = jax.random.normal(k2, (1, 128, 2, 32))
+    v = jax.random.normal(k3, (1, 128, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=False)
+    exp = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([32, 64, 128]),
+       st.sampled_from([1, 2, 4]), st.integers(0, 2**31 - 1))
+def test_flash_attention_property(b, s, kh, seed):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(kk, 3)
+    h, dh = kh * 2, 32
+    q = jax.random.normal(k1, (b, s, h, dh))
+    k = jax.random.normal(k2, (b, s, kh, dh))
+    v = jax.random.normal(k3, (b, s, kh, dh))
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 128), (96, 32)])
+@pytest.mark.parametrize("h,g", [(4, 1), (4, 2), (8, 8)])
+def test_ssd_scan_sweep(s, chunk, h, g):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    b, p, n = 2, 16, 16
+    x = jax.random.normal(k1, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+    a_neg = -jnp.exp(jax.random.normal(k3, (h,)) * 0.5)
+    bm = jax.random.normal(k4, (b, s, g, n)) * 0.5
+    cm = jax.random.normal(k1, (b, s, g, n)) * 0.5
+    out = ops.ssd_scan(x, dt, a_neg, bm, cm, chunk=chunk)
+    exp = ref.ssd_ref(x, dt, a_neg, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_model_path_matches_ref():
+    """models/ssm.ssd_chunked (the production path) == sequential oracle."""
+    from repro.models.ssm import ssd_chunked
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    b, s, h, p, g, n = 2, 64, 4, 16, 2, 8
+    x = jax.random.normal(k1, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+    a_neg = -jnp.exp(jax.random.normal(k3, (h,)) * 0.5)
+    bm = jax.random.normal(k4, (b, s, g, n)) * 0.5
+    cm = jax.random.normal(k1, (b, s, g, n)) * 0.5
+    y, _ = ssd_chunked(x, dt, a_neg, bm, cm, chunk=16)
+    exp = ref.ssd_ref(x, dt, a_neg, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_carry_consistency():
+    """Splitting the sequence and carrying state == processing it whole."""
+    from repro.models.ssm import ssd_chunked
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    b, s, h, p, g, n = 1, 64, 2, 8, 1, 8
+    x = jax.random.normal(k1, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, s, h)))
+    a_neg = -jnp.exp(jax.random.normal(k3, (h,)) * 0.5)
+    bm = jax.random.normal(k4, (b, s, g, n)) * 0.5
+    cm = jax.random.normal(k1, (b, s, g, n)) * 0.5
+    y_full, st_full = ssd_chunked(x, dt, a_neg, bm, cm, chunk=16)
+    half = s // 2
+    y1, st1 = ssd_chunked(x[:, :half], dt[:, :half], a_neg, bm[:, :half],
+                          cm[:, :half], chunk=16)
+    y2, st2 = ssd_chunked(x[:, half:], dt[:, half:], a_neg, bm[:, half:],
+                          cm[:, half:], chunk=16, state0=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,90 @@
+"""MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.models.moe import _dispatch_indices, expert_capacity, moe_apply, moe_def
+from repro.models.param import init_params
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 64), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+def test_dispatch_indices_invariants(e, a, cap, seed):
+    rng = np.random.default_rng(seed)
+    eid = jnp.asarray(rng.integers(0, e, size=a))
+    slot, keep = _dispatch_indices(eid, cap, e)
+    slot, keep, eid = np.asarray(slot), np.asarray(keep), np.asarray(eid)
+    # kept slots are unique and within range
+    kept = slot[keep]
+    assert len(np.unique(kept)) == len(kept)
+    assert np.all(kept < e * cap)
+    # slot // cap equals the expert id for kept assignments
+    assert np.all(kept // cap == eid[keep])
+    # per-expert kept count never exceeds capacity
+    for ex in range(e):
+        assert np.sum(eid[keep] == ex) <= cap
+    # earlier tokens win under overflow (rank by token order)
+    for ex in range(e):
+        idx = np.where(eid == ex)[0]
+        expect_keep = idx[:cap]
+        assert np.array_equal(idx[keep[idx]], expect_keep)
+
+
+def _moe_cfg(e=4, k=2, shared=0):
+    return ModelConfig(d_model=32, d_ff=64, moe_num_experts=e, moe_top_k=k,
+                       moe_shared_experts=shared, moe_d_ff=48,
+                       param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+def test_moe_apply_shapes_and_aux(key):
+    cfg = _moe_cfg()
+    params = init_params(moe_def(cfg, tp=1, dp=1), key)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    y, aux = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+    assert float(aux) >= 1.0 - 1e-3      # E * sum(f*P) >= 1 (balance optimum)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg().replace(capacity_factor=0.1)
+    assert expert_capacity(cfg, 1024) < 1024 * 2 // 4
+
+
+def test_moe_shared_expert_always_on(key):
+    cfg = _moe_cfg(shared=1)
+    params = init_params(moe_def(cfg, tp=1, dp=1), key)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    y1, _ = moe_apply(params, x, cfg)
+    # zero the routed experts: output must still be nonzero (shared path)
+    p2 = dict(params)
+    p2["wo"] = jnp.zeros_like(params["wo"])
+    y2, _ = moe_apply(p2, x, cfg)
+    assert float(jnp.max(jnp.abs(y2))) > 0.0
+
+
+def test_moe_matches_dense_sum_when_k_equals_e(key):
+    """top-k == num_experts with huge capacity => every expert processes
+    every token; combine weights sum to 1."""
+    cfg = _moe_cfg(e=2, k=2).replace(capacity_factor=4.0)
+    params = init_params(moe_def(cfg, tp=1, dp=1), key)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    y, _ = moe_apply(params, x, cfg)
+
+    # manual dense mixture with softmaxed weights
+    logits = jnp.einsum("bsd,de->bse", x, params["router"])
+    w = jax.nn.softmax(logits, -1)
+
+    def expert(i):
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"][i, :, 0, :])
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x,
+                                        params["wi"][i, :, 1, :])
+        return jnp.einsum("bsf,fd->bsd", h, params["wo"][i])
+
+    dense = sum(w[..., i:i + 1] * expert(i) for i in range(2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)

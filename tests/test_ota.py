@@ -1,0 +1,103 @@
+"""OTA aggregation operators: expectation semantics + equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, ota, power_control as pcm
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from tests.test_theory import make_prm
+
+N, D = 10, 400
+
+
+@pytest.fixture(scope="module")
+def setup():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=N, seed=0))
+    prm = make_prm(dep.gains, d=814090)
+    g = jax.random.normal(jax.random.PRNGKey(7), (N, D))
+    return dep, prm, g
+
+
+def test_expected_aggregate_is_biased_combination(setup):
+    """E[g_hat] = sum_m p_m g_m (eq. (8)) — the structured bias."""
+    dep, prm, g = setup
+    pc = pcm.make_power_control("sca", dep, prm)
+    keys = jax.random.split(jax.random.PRNGKey(8), 6000)
+
+    def one(k):
+        h = ota.draw_fading(k, jnp.asarray(dep.gains))
+        return ota.ota_aggregate(g, pc, h, k)
+
+    mean = jnp.mean(jax.vmap(one)(keys), axis=0)
+    expected = jnp.sum(jnp.asarray(pc.p)[:, None] * g, axis=0)
+    resid = float(jnp.max(jnp.abs(mean - expected)))
+    scale = float(jnp.max(jnp.abs(expected)))
+    assert resid < 0.15 * max(scale, 1.0)
+
+
+def test_ideal_aggregate_exact(setup):
+    dep, prm, g = setup
+    pc = pcm.make_power_control("ideal", dep, prm)
+    key = jax.random.PRNGKey(9)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    out = ota.ota_aggregate(g, pc, h, key)
+    assert jnp.allclose(out, jnp.mean(g, axis=0), atol=1e-6)
+
+
+def test_weighted_loss_formulation_equivalence(setup):
+    """Per-client loss weights reproduce sum_m s_m grad f_m exactly
+    (the pjit-native train-step path)."""
+    dep, prm, _ = setup
+    pc = pcm.make_power_control("sca", dep, prm)
+    key = jax.random.PRNGKey(10)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, _ = pc.round_coeffs(h, key)
+
+    w_param = jax.random.normal(key, (D,))
+    x = jax.random.normal(jax.random.PRNGKey(11), (N, 4, D))
+
+    def local_loss(w, xm):                      # per-client quadratic
+        return jnp.mean((xm @ w) ** 2)
+
+    # explicit: sum_m s_m grad f_m
+    grads = jax.vmap(lambda xm: jax.grad(local_loss)(w_param, xm))(x)
+    explicit = jnp.sum(s[:, None] * grads, axis=0)
+
+    # weighted-loss: grad of mean_m (N s_m) f_m
+    wts = ota.per_client_loss_weights(s)
+
+    def weighted(w):
+        per = jax.vmap(lambda xm: local_loss(w, xm))(x)
+        return jnp.mean(wts * per)
+
+    implicit = jax.grad(weighted)(w_param)
+    assert jnp.allclose(explicit, implicit, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_kernel_matches_ota_semantics(setup):
+    """kernels/ota_aggregate == core semantics given the same z draw."""
+    dep, prm, g = setup
+    pc = pcm.make_power_control("sca", dep, prm)
+    key = jax.random.PRNGKey(12)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, ns = pc.round_coeffs(h, key)
+    z = jax.random.normal(key, (D,))
+    out_kernel = kops.ota_aggregate(g, s, z, ns)
+    out_ref = kref.ota_aggregate_ref(g, s, z, ns)
+    assert jnp.allclose(out_kernel, out_ref, atol=1e-5)
+
+
+def test_noise_variance_scaling(setup):
+    """Receiver-noise power in the aggregate matches d * noise_scale^2."""
+    dep, prm, _ = setup
+    pc = pcm.make_power_control("zero_bias", dep, prm)
+    key = jax.random.PRNGKey(13)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    _, ns = pc.round_coeffs(h, key)
+    zeros = jnp.zeros((N, D))
+    keys = jax.random.split(key, 2000)
+    outs = jax.vmap(lambda k: ota.ota_aggregate(zeros, pc, h, k))(keys)
+    emp_var = float(jnp.mean(jnp.sum(outs ** 2, axis=1)))
+    assert emp_var == pytest.approx(D * float(ns) ** 2, rel=0.1)

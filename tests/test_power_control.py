@@ -1,0 +1,103 @@
+"""Power-control schemes: per-round coefficient semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, ota, power_control as pcm
+from tests.test_theory import make_prm
+
+N = 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=N, seed=0))
+    prm = make_prm(dep.gains, d=814090)
+    return dep, prm
+
+
+@pytest.mark.parametrize("name", pcm.SCHEMES)
+def test_coeff_shapes_and_finiteness(setup, name):
+    dep, prm = setup
+    pc = pcm.make_power_control(name, dep, prm)
+    key = jax.random.PRNGKey(0)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, ns = pc.round_coeffs(h, key)
+    assert s.shape == (N,)
+    assert jnp.all(jnp.isfinite(s)) and jnp.isfinite(ns)
+    assert float(ns) >= 0.0
+
+
+def test_truncated_expected_coeff_is_p(setup):
+    """E[s_m] = E[chi] gamma / alpha = p_m for the SCA scheme."""
+    dep, prm = setup
+    pc = pcm.make_power_control("sca", dep, prm)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+
+    def one(k):
+        h = ota.draw_fading(k, jnp.asarray(dep.gains))
+        s, _ = pc.round_coeffs(h, k)
+        return s
+
+    s_mean = np.asarray(jnp.mean(jax.vmap(one)(keys), axis=0))
+    assert np.allclose(s_mean, pc.p, atol=0.02)
+
+
+def test_vanilla_unbiased_and_csi_flags(setup):
+    dep, prm = setup
+    van = pcm.make_power_control("vanilla", dep, prm)
+    key = jax.random.PRNGKey(2)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, _ = van.round_coeffs(h, key)
+    assert np.allclose(np.asarray(s), 1.0 / N)       # zero instantaneous bias
+    assert van.requires_global_csi
+    assert not pcm.make_power_control("sca", dep, prm).requires_global_csi
+    assert not pcm.make_power_control("lcpc", dep, prm).requires_global_csi
+
+
+def test_opc_mse_not_worse_than_vanilla(setup):
+    """OPC optimizes the per-round MSE objective vanilla implicitly uses."""
+    dep, prm = setup
+    opc = pcm.make_power_control("opc", dep, prm)
+    van = pcm.make_power_control("vanilla", dep, prm)
+    gmax, n0 = prm.gmax, prm.n0
+
+    def mse(s, ns):
+        return float(gmax ** 2 * jnp.sum((s - 1.0 / N) ** 2) + ns ** 2)
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 200)
+    worse = 0
+    for k in keys:
+        h = ota.draw_fading(k, jnp.asarray(dep.gains))
+        mo = mse(*opc.round_coeffs(h, k))
+        mv = mse(*van.round_coeffs(h, k))
+        worse += mo > mv * 1.05
+    assert worse < 10      # grid resolution allows rare tiny regressions
+
+
+def test_bbfl_interior_masks_far_devices(setup):
+    dep, prm = setup
+    bb = pcm.make_power_control("bbfl_interior", dep, prm)
+    key = jax.random.PRNGKey(4)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, _ = bb.round_coeffs(h, key)
+    far = dep.distances > 0.6 * dep.cfg.r_max
+    assert np.all(np.asarray(s)[far] == 0.0)
+    assert np.asarray(s).sum() == pytest.approx(1.0)
+
+
+def test_ideal_is_noiseless(setup):
+    dep, prm = setup
+    pc = pcm.make_power_control("ideal", dep, prm)
+    key = jax.random.PRNGKey(5)
+    h = ota.draw_fading(key, jnp.asarray(dep.gains))
+    s, ns = pc.round_coeffs(h, key)
+    assert float(ns) == 0.0
+    assert np.allclose(np.asarray(s), 1.0 / N)
+
+
+def test_lcpc_common_prescaler(setup):
+    dep, prm = setup
+    pc = pcm.make_power_control("lcpc", dep, prm)
+    assert np.allclose(pc.gamma, pc.gamma[0])        # common gamma

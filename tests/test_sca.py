@@ -1,0 +1,76 @@
+"""SCA power-control solver: descent, convergence, solution quality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, sca, theory
+from tests.test_theory import make_prm
+
+
+@pytest.fixture(scope="module")
+def prm():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=0))
+    return make_prm(dep.gains, d=814090)
+
+
+def test_sca_monotone_descent(prm):
+    res = sca.solve_sca(prm)
+    assert res.converged
+    diffs = np.diff(res.history)
+    assert np.all(diffs <= 1e-9), res.history
+
+
+def test_sca_beats_zero_bias(prm):
+    """The optimized bias-variance trade-off must beat the zero-bias design
+    under heterogeneity — the paper's core claim."""
+    res = sca.solve_sca(prm)
+    zb = theory.p1_objective(theory.zero_bias_gamma(prm), prm)
+    assert res.objective < zb * 0.99
+
+
+def test_sca_matches_direct_oracle(prm):
+    res = sca.solve_sca(prm)
+    oracle = sca.solve_direct(prm)
+    assert res.objective <= oracle.objective * 1.02
+
+
+def test_sca_solution_feasible(prm):
+    res = sca.solve_sca(prm)
+    assert np.all(res.gamma > 0)
+    assert np.all(res.gamma <= theory.gamma_max(prm) * (1 + 1e-9))
+    assert abs(res.p.sum() - 1.0) < 1e-9
+    am = theory.alpha_of_gamma(res.gamma, prm)
+    assert np.allclose(am, res.alpha * res.p, rtol=1e-9)   # coupling (i)
+
+
+def test_sca_homogeneous_recovers_uniform():
+    """Equal path loss => the optimum is (near-)uniform participation."""
+    gains = np.full(8, 1e-12)
+    prm = make_prm(gains)
+    res = sca.solve_sca(prm)
+    assert np.allclose(res.p, 1.0 / 8, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=3, max_value=12))
+def test_sca_descent_property(seed, n):
+    rng = np.random.default_rng(seed)
+    dists = rng.uniform(100.0, 1750.0, size=n)
+    gains = channel.average_gain(dists)
+    prm = make_prm(gains)
+    res = sca.solve_sca(prm, max_iters=15)
+    assert np.all(np.diff(res.history) <= 1e-9)
+    assert res.objective <= res.history[0] + 1e-12
+    assert abs(res.p.sum() - 1.0) < 1e-9
+
+
+def test_sca_kappa_controls_bias():
+    """Larger data heterogeneity (kappa) pushes the optimum toward uniform
+    participation (less bias tolerated)."""
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=1))
+    lo = sca.solve_sca(make_prm(dep.gains, kappa_sq=0.01))
+    hi = sca.solve_sca(make_prm(dep.gains, kappa_sq=400.0))
+    dev_lo = np.sum((lo.p - 0.1) ** 2)
+    dev_hi = np.sum((hi.p - 0.1) ** 2)
+    assert dev_hi < dev_lo

@@ -1,0 +1,122 @@
+"""Theorem-1 quantities: invariants and property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, theory
+from repro.core.theory import OTAParams
+
+
+def make_prm(gains, d=10000, gmax=10.0, sigma=0.0, eta=0.05, kappa_sq=4.0):
+    gains = np.asarray(gains, dtype=np.float64)
+    wcfg = channel.WirelessConfig(num_devices=len(gains))
+    return OTAParams(d=d, gmax=gmax, es=wcfg.energy_per_sample,
+                     n0=wcfg.noise_psd, gains=gains,
+                     sigma_sq=np.full(len(gains), sigma), eta=eta,
+                     lsmooth=1.0, kappa_sq=kappa_sq)
+
+
+@pytest.fixture(scope="module")
+def prm():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=0))
+    return make_prm(dep.gains)
+
+
+def test_alpha_max_is_max(prm):
+    """alpha_m(gamma) attains its maximum at gamma_max."""
+    gm = theory.gamma_max(prm)
+    am = theory.alpha_max(prm)
+    assert np.allclose(theory.alpha_of_gamma(gm, prm), am, rtol=1e-12)
+    for f in (0.5, 0.9, 1.1, 2.0):
+        assert np.all(theory.alpha_of_gamma(f * gm, prm) <= am + 1e-30)
+
+
+def test_participation_is_simplex(prm):
+    gm = theory.gamma_max(prm)
+    _, a, p = theory.participation(0.7 * gm, prm)
+    assert a > 0
+    assert np.all(p >= 0)
+    assert abs(p.sum() - 1.0) < 1e-12
+
+
+def test_invert_alpha_roundtrip(prm):
+    gm = theory.gamma_max(prm)
+    gamma = 0.6 * gm
+    am = theory.alpha_of_gamma(gamma, prm)
+    g2 = theory.invert_alpha(am, prm)
+    assert np.allclose(g2, gamma, rtol=1e-9)
+
+
+def test_zero_bias_gives_uniform_p(prm):
+    g0 = theory.zero_bias_gamma(prm)
+    _, _, p = theory.participation(g0, prm)
+    assert np.allclose(p, 0.1, atol=1e-9)
+    assert theory.bias_term(p, prm) < 1e-18
+
+
+def test_zero_bias_binds_weakest_device(prm):
+    """The common alpha target equals the weakest device's alpha_max."""
+    g0 = theory.zero_bias_gamma(prm)
+    am = theory.alpha_of_gamma(g0, prm)
+    assert np.allclose(am, np.min(theory.alpha_max(prm)), rtol=1e-9)
+
+
+def test_zeta_decomposition_positive(prm):
+    gm = theory.gamma_max(prm)
+    z = theory.zeta_terms(0.8 * gm, prm)
+    assert z["transmission"] >= -1e-12
+    assert z["minibatch"] == 0.0
+    assert z["noise"] > 0
+    assert z["total"] == pytest.approx(
+        z["transmission"] + z["minibatch"] + z["noise"])
+
+
+def test_bound_decreases_with_rounds(prm):
+    gm = theory.gamma_max(prm)
+    b1 = theory.theorem1_bound(gm, prm, init_gap=5.0, num_rounds=10)
+    b2 = theory.theorem1_bound(gm, prm, init_gap=5.0, num_rounds=1000)
+    assert b2["total"] < b1["total"]
+    assert b1["variance"] == pytest.approx(b2["variance"])
+    assert b1["bias"] == pytest.approx(b2["bias"])
+
+
+def test_bias_variance_tradeoff_visible(prm):
+    """Scaling all gammas up increases bias-side terms and reduces noise:
+    the trade-off of §III-A."""
+    g0 = theory.zero_bias_gamma(prm)          # uniform p, higher noise
+    gm = theory.gamma_max(prm)                # max alpha, nonzero bias
+    z0 = theory.zeta_terms(g0, prm)
+    zm = theory.zeta_terms(gm, prm)
+    assert zm["noise"] < z0["noise"]          # bigger alpha kills noise
+    _, _, p0 = theory.participation(g0, prm)
+    _, _, pm = theory.participation(gm, prm)
+    assert theory.bias_term(pm, prm) > theory.bias_term(p0, prm)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=50.0, max_value=1750.0),
+                min_size=2, max_size=16))
+def test_participation_simplex_property(dists):
+    gains = channel.average_gain(np.asarray(dists))
+    prm = make_prm(gains)
+    gm = theory.gamma_max(prm)
+    for frac in (0.3, 1.0):
+        _, a, p = theory.participation(frac * gm, prm)
+        assert np.all(p >= 0) and abs(p.sum() - 1.0) < 1e-9
+        assert np.all(theory.alpha_of_gamma(frac * gm, prm)
+                      <= theory.alpha_max(prm) * (1 + 1e-12))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=12),
+       st.integers(min_value=0, max_value=10_000))
+def test_kappa_bound_assumption4(n, seed):
+    """kappa <= 2 G_max whenever per-device gradients are G_max-bounded."""
+    rng = np.random.default_rng(seed)
+    gmax = 10.0
+    grads = rng.normal(size=(n, 32))
+    grads /= np.maximum(np.linalg.norm(grads, axis=1, keepdims=True) / gmax,
+                        1.0)
+    gbar = grads.mean(0)
+    kappa_sq = np.mean(np.sum((grads - gbar) ** 2, axis=1))
+    assert kappa_sq <= (2 * gmax) ** 2 + 1e-9
