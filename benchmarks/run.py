@@ -43,6 +43,16 @@ def main(argv=None) -> None:
     for row in sca_bench.bound_decomposition():
         print(_csv(row), flush=True)
 
+    # --- scenario-family sweep (DESIGN.md §Scenarios) ---
+    from benchmarks import scenario_sweep
+    for row in scenario_sweep.sweep():
+        row["bench"] = f"scenario_{row.pop('scenario')}_{row.pop('scheme')}"
+        for k in ("bias", "variance", "var_transmission", "var_noise",
+                  "objective", "p_spread", "mean_participation",
+                  "gain_spread_db"):
+            row[k] = f"{row[k]:.4g}"
+        print(_csv(row), flush=True)
+
     # --- kernel micro-benches ---
     from benchmarks import kernel_bench
     for row in kernel_bench.run():

@@ -1,0 +1,158 @@
+"""Scenario-family sweep: bias/variance/objective per power-control scheme
+across heterogeneous wireless deployments (DESIGN.md §Scenarios).
+
+    PYTHONPATH=src python -m benchmarks.scenario_sweep [--train] [--rounds N]
+
+For every scenario in the sweep grid (default: the four-family grid
+``scenarios.SWEEP_FAMILIES`` — disk-Rayleigh baseline, Rician, shadowed,
+two-cluster; ``--all`` sweeps the whole registry) and every statistical-CSI
+scheme (sca / lcpc / zero_bias), this computes the Theorem-1 quantities with
+the scenario's family-aware statistics:
+
+    bias        2 N kappa^2 sum_m (p_m - 1/N)^2          (theory.bias_term)
+    variance    zeta = transmission + minibatch + noise  (theory.zeta_terms)
+    objective   2 eta L zeta + bias                      (the (P1) objective)
+
+and emits one CSV row per (scenario, scheme).  With ``--train`` it also runs
+the paper's MLP task through ``fl.server`` on each scenario's FadingProcess
+and appends test accuracy — on disk_rayleigh this training path is
+bit-identical to benchmarks/fig2.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.configs.paper_mlp import CONFIG as PAPER
+from repro.core import power_control as pcm
+from repro.core import scenarios as scn
+from repro.core import theory
+
+SCHEMES = ("sca", "lcpc", "zero_bias")
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "scenario_sweep")
+
+
+def scheme_theory_row(name: str, dep, prm) -> dict:
+    """Theorem-1 decomposition for a truncated-inversion scheme."""
+    pc = pcm.make_power_control(name, dep, prm)
+    z = theory.zeta_terms(pc.gamma, prm)
+    bias = theory.bias_term(pc.p, prm)
+    return {
+        "scheme": name,
+        "bias": bias,
+        "variance": z["total"],
+        "var_transmission": z["transmission"],
+        "var_noise": z["noise"],
+        "objective": 2.0 * prm.eta * prm.lsmooth * z["total"] + bias,
+        "p_spread": float(np.max(pc.p) - np.min(pc.p)),
+        "mean_participation": float(np.mean(
+            theory.expected_participation_indicator(pc.gamma, prm))),
+    }
+
+
+def sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
+          d: int = 814090, gmax: float = 10.0, eta: float = 0.05,
+          kappa_sq: float = 4.0, seed: int = 0) -> list:
+    """One theory row per (scenario, scheme)."""
+    rows = []
+    for sc_name in scenario_names:
+        sc = scn.get_scenario(sc_name)
+        dep = scn.realize(sc, seed=seed)
+        prm = scn.make_ota_params(dep, d=d, gmax=gmax, eta=eta,
+                                  kappa_sq=kappa_sq)
+        for scheme in schemes:
+            row = scheme_theory_row(scheme, dep, prm)
+            row.update(scenario=sc_name, fading=dep.fading_spec.family,
+                       gain_spread_db=float(10 * np.log10(
+                           dep.gains.max() / dep.gains.min())))
+            rows.append(row)
+    return rows
+
+
+def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
+                num_rounds: int = 100, eval_every: int = 20,
+                seed: int = 0, log: bool = False) -> list:
+    """Short FL runs (paper MLP task) per (scenario, scheme)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import partition, synthetic
+    from repro.fl.server import FLRunConfig, run_fl
+    from repro.models import mlp
+    from repro.models.param import init_params
+
+    x, y, xt, yt = synthetic.mnist_like(PAPER.samples_per_class, noise=0.75,
+                                        seed=seed)
+    shards = partition.partition_by_label(x, y, PAPER.num_devices,
+                                          PAPER.labels_per_device,
+                                          PAPER.max_devices_per_label,
+                                          seed=seed)
+    data = partition.stack_shards(shards)
+    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+
+    rows = []
+    for sc_name in scenario_names:
+        sc = scn.get_scenario(sc_name)
+        dep = scn.realize(sc, seed=seed)
+        prm = scn.make_ota_params(dep, d=mlp.PARAM_DIM, gmax=PAPER.gmax,
+                                  eta=0.05, kappa_sq=4.0)
+        fading = scn.make_fading_process(dep, sc.dynamics)
+        for scheme in schemes:
+            # global-CSI schemes pick up dropout-awareness from dep.p_dropout
+            pc = pcm.make_power_control(scheme, dep, prm)
+            run_cfg = FLRunConfig(eta=0.05, num_rounds=num_rounds,
+                                  eval_every=eval_every, gmax=PAPER.gmax,
+                                  seed=seed)
+            _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data,
+                             run_cfg, evals, log=log, fading=fading)
+            rows.append({"scenario": sc_name, "scheme": scheme,
+                         "final_acc": round(hist[-1]["acc"], 4),
+                         "rounds": num_rounds})
+    return rows
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every registered scenario")
+    ap.add_argument("--train", action="store_true",
+                    help="also run short FL training per (scenario, scheme)")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    names = scn.scenario_names() if args.all else scn.SWEEP_FAMILIES
+    rows = sweep(names, seed=args.seed)
+    cols = ("scenario", "scheme", "bias", "variance", "objective",
+            "p_spread", "mean_participation", "gain_spread_db")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols), flush=True)
+
+    if args.train:
+        trows = train_sweep(names, num_rounds=args.rounds, seed=args.seed)
+        print("scenario,scheme,final_acc,rounds")
+        for r in trows:
+            print(f"{r['scenario']},{r['scheme']},{r['final_acc']},"
+                  f"{r['rounds']}", flush=True)
+        rows = {"theory": rows, "train": trows}
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    with open(os.path.join(ARTIFACT_DIR,
+                           f"sweep_seed{args.seed}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

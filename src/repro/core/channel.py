@@ -1,12 +1,21 @@
-"""Wireless channel model for OTA-FL (paper §II).
+"""Wireless channel model for OTA-FL (paper §II; DESIGN.md §Scenarios).
 
-Flat Rayleigh fading MAC: h_{m,t} ~ CN(0, Lambda_m), i.i.d. over rounds,
-independent across devices.  Lambda_m (average channel gain) follows the
-log-distance path-loss model of §IV:
+Baseline: flat Rayleigh fading MAC, h_{m,t} ~ CN(0, Lambda_m), i.i.d. over
+rounds, independent across devices.  Lambda_m (average channel gain) follows
+the log-distance path-loss model of §IV:
 
     PL(dist)[dB] = PL0 + 10 * beta * log10(dist / d0)
 
 with PL0 = 50 dB at d0 = 1 m and path-loss exponent beta = 2.2.
+
+Beyond the paper's Rayleigh baseline, ``FadingSpec`` describes the
+small-scale fading *family* (Rayleigh / Rician with per-device K-factor /
+Nakagami-m), always normalized so E|h_m|^2 = Lambda_m.  The statistical-CSI
+quantities the power-control designs need — the magnitude survival function
+P(|h| >= x) and magnitude quantiles — have per-family closed forms here,
+with a Monte-Carlo fallback for families without one.  Scenario composition
+(deployment geometries, shadowing, round dynamics) lives in
+``repro.core.scenarios``.
 
 All power-control math is done in float64 numpy (the physical scales are
 ~1e-9 .. 1e-21); the training path consumes the resulting dimensionless
@@ -47,6 +56,53 @@ def average_gain(dist_m: np.ndarray, pl0_db: float = DEFAULT_PL0_DB,
     return 10.0 ** (-path_loss_db(dist_m, pl0_db, exponent) / 10.0)
 
 
+# ---------------------------------------------------------------------------
+# Small-scale fading families (DESIGN.md §Scenarios).
+# ---------------------------------------------------------------------------
+
+FADING_FAMILIES = ("rayleigh", "rician", "nakagami")
+
+
+@dataclasses.dataclass(frozen=True)
+class FadingSpec:
+    """Small-scale fading family, normalized so E|h_m|^2 = Lambda_m.
+
+    rayleigh    h ~ CN(0, Lambda)                       (paper baseline)
+    rician      h = sqrt(K Lambda/(K+1)) + CN(0, Lambda/(K+1)); the K-factor
+                may be a scalar or a per-device [N] array (LOS-rich near
+                devices, scattered far devices).
+    nakagami    |h|^2 ~ Gamma(m, Lambda/m), uniform phase; m >= 0.5 scalar
+                or per-device [N].  m=1 recovers Rayleigh.
+    """
+    family: str = "rayleigh"
+    rician_k: object = 5.0       # K-factor (linear), scalar or [N]
+    nakagami_m: object = 2.0     # shape m >= 0.5, scalar or [N]
+
+    def __post_init__(self):
+        if self.family not in FADING_FAMILIES:
+            raise ValueError(f"unknown fading family {self.family!r}; "
+                             f"available: {FADING_FAMILIES}")
+
+
+RAYLEIGH = FadingSpec()
+
+
+def _per_device(param, shape) -> np.ndarray:
+    """Broadcast a scalar or per-device [N] parameter to ``shape``, where the
+    leading axis of ``shape`` is the device axis (e.g. [N, G] grids)."""
+    p = np.asarray(param, dtype=np.float64)
+    if p.ndim == 1 and len(shape) > 1 and p.shape[0] == shape[0]:
+        p = p.reshape((shape[0],) + (1,) * (len(shape) - 1))
+    return np.broadcast_to(p, shape)
+
+
+def _rician_nu_sigma(gains: np.ndarray, k: np.ndarray):
+    """Rice parameters: LOS amplitude nu and diffuse per-component std sigma."""
+    nu = np.sqrt(gains * k / (k + 1.0))
+    sigma = np.sqrt(gains / (2.0 * (k + 1.0)))
+    return nu, sigma
+
+
 @dataclasses.dataclass(frozen=True)
 class WirelessConfig:
     """Statistical description of the heterogeneous wireless deployment.
@@ -81,14 +137,27 @@ class WirelessConfig:
 
 @dataclasses.dataclass(frozen=True)
 class Deployment:
-    """A realized device deployment: distances and average gains."""
+    """A realized device deployment: distances and average gains.
+
+    ``fading`` (None = Rayleigh, the paper baseline) carries the small-scale
+    family so power-control designs built from this deployment use the right
+    statistical-CSI formulas; ``shadowing_db`` keeps the realized log-normal
+    shadowing offsets (already folded into ``gains``) for inspection.
+    """
     cfg: WirelessConfig
     distances: np.ndarray    # [N] meters
     gains: np.ndarray        # [N] Lambda_m (linear)
+    fading: Optional[FadingSpec] = None
+    shadowing_db: Optional[np.ndarray] = None   # [N] dB, already in gains
+    p_dropout: float = 0.0   # per-round device dropout prob (scenario dynamics)
 
     @property
     def num_devices(self) -> int:
         return int(self.gains.shape[0])
+
+    @property
+    def fading_spec(self) -> FadingSpec:
+        return self.fading if self.fading is not None else RAYLEIGH
 
 
 def deploy(cfg: WirelessConfig, distances: Optional[np.ndarray] = None) -> Deployment:
@@ -108,23 +177,94 @@ def deploy(cfg: WirelessConfig, distances: Optional[np.ndarray] = None) -> Deplo
 
 
 def draw_fading(rng: np.random.Generator, gains: np.ndarray,
-                num_rounds: int = 1) -> np.ndarray:
-    """Draw h_{m,t} ~ CN(0, Lambda_m), shape [num_rounds, N] complex128.
+                num_rounds: int = 1,
+                spec: Optional[FadingSpec] = None) -> np.ndarray:
+    """Draw h_{m,t} per ``spec``, shape [num_rounds, N] complex128.
 
-    CN(0, L): real/imag each N(0, L/2) so that E|h|^2 = L.
+    Default (spec None / rayleigh): h ~ CN(0, L), real/imag each N(0, L/2)
+    so that E|h|^2 = L.  All families preserve E|h|^2 = L exactly.
     """
     gains = np.asarray(gains, dtype=np.float64)
     n = gains.shape[0]
-    scale = np.sqrt(gains / 2.0)
-    re = rng.standard_normal((num_rounds, n)) * scale
-    im = rng.standard_normal((num_rounds, n)) * scale
-    return re + 1j * im
+    if spec is None or spec.family == "rayleigh":
+        scale = np.sqrt(gains / 2.0)
+        re = rng.standard_normal((num_rounds, n)) * scale
+        im = rng.standard_normal((num_rounds, n)) * scale
+        return re + 1j * im
+    if spec.family == "rician":
+        k = _per_device(spec.rician_k, (n,))
+        nu, sigma = _rician_nu_sigma(gains, k)
+        re = nu + rng.standard_normal((num_rounds, n)) * sigma
+        im = rng.standard_normal((num_rounds, n)) * sigma
+        return re + 1j * im
+    if spec.family == "nakagami":
+        m = _per_device(spec.nakagami_m, (n,))
+        power = rng.gamma(shape=np.broadcast_to(m, (num_rounds, n)),
+                          scale=np.broadcast_to(gains / m, (num_rounds, n)))
+        phase = rng.uniform(0.0, 2.0 * np.pi, size=(num_rounds, n))
+        return np.sqrt(power) * np.exp(1j * phase)
+    raise ValueError(f"unknown fading family {spec.family!r}")
 
 
-def fading_magnitude_quantile(gains: np.ndarray, q: float) -> np.ndarray:
-    """q-quantile of |h_m| under Rayleigh fading: |h| ~ Rayleigh(sqrt(L/2)).
+def fading_magnitude_sf(gains: np.ndarray, x: np.ndarray,
+                        spec: Optional[FadingSpec] = None) -> np.ndarray:
+    """Survival function P(|h_m| >= x) per device (broadcasts gains vs x).
 
-    P(|h| <= x) = 1 - exp(-x^2 / L)  =>  x_q = sqrt(-L * ln(1-q)).
+    This is the E[chi] primitive of the truncated-inversion designs
+    (theory.expected_participation_indicator) for every fading family:
+
+      rayleigh   exp(-x^2 / L)
+      rician     Marcum-Q_1(nu/sigma, x/sigma)         (scipy.stats.rice)
+      nakagami   Gamma(m, m x^2 / L) / Gamma(m)        (regularized upper)
+    """
+    g0 = np.asarray(gains, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    if spec is None or spec.family == "rayleigh":
+        return np.exp(-x**2 / g0)
+    if spec.family == "rician":
+        from scipy.stats import rice
+        k = _per_device(spec.rician_k, g0.shape)
+        gains, x, k = np.broadcast_arrays(g0, x, k)
+        nu, sigma = _rician_nu_sigma(gains, k)
+        return rice.sf(x / sigma, nu / sigma)
+    if spec.family == "nakagami":
+        from scipy.special import gammaincc
+        m = _per_device(spec.nakagami_m, g0.shape)
+        gains, x, m = np.broadcast_arrays(g0, x, m)
+        return gammaincc(m, m * x**2 / gains)
+    raise ValueError(f"unknown fading family {spec.family!r}")
+
+
+def fading_magnitude_quantile(gains: np.ndarray, q: float,
+                              spec: Optional[FadingSpec] = None) -> np.ndarray:
+    """q-quantile of |h_m| per fading family (closed forms).
+
+    Rayleigh (default): P(|h| <= x) = 1 - exp(-x^2/L) => x_q = sqrt(-L ln(1-q)).
+    Rician: scipy rice.ppf.  Nakagami: x_q = sqrt(L P^{-1}(m, q) / m) with
+    P the regularized lower incomplete gamma.  Any future family without a
+    closed form can use ``fading_magnitude_quantile_mc``.
     """
     gains = np.asarray(gains, dtype=np.float64)
-    return np.sqrt(-gains * np.log1p(-q))
+    if spec is None or spec.family == "rayleigh":
+        return np.sqrt(-gains * np.log1p(-q))
+    if spec.family == "rician":
+        from scipy.stats import rice
+        k = _per_device(spec.rician_k, gains.shape)
+        nu, sigma = _rician_nu_sigma(gains, k)
+        return rice.ppf(q, nu / sigma) * sigma
+    if spec.family == "nakagami":
+        from scipy.special import gammaincinv
+        m = _per_device(spec.nakagami_m, gains.shape)
+        return np.sqrt(gains * gammaincinv(m, q) / m)
+    raise ValueError(f"unknown fading family {spec.family!r}")
+
+
+def fading_magnitude_quantile_mc(gains: np.ndarray, q: float,
+                                 spec: Optional[FadingSpec] = None,
+                                 num_draws: int = 200_000,
+                                 seed: int = 0) -> np.ndarray:
+    """Monte-Carlo magnitude quantile — fallback/cross-check for any family
+    ``draw_fading`` can sample (used by tests to validate the closed forms)."""
+    rng = np.random.default_rng(seed)
+    h = np.abs(draw_fading(rng, gains, num_rounds=num_draws, spec=spec))
+    return np.quantile(h, q, axis=0)

@@ -35,6 +35,30 @@ def draw_fading(key: jax.Array, gains: jax.Array) -> jax.Array:
     return jax.lax.complex(re, im)
 
 
+def draw_fading_rician(key: jax.Array, gains: jax.Array,
+                       k_factor: jax.Array) -> jax.Array:
+    """Rician: deterministic LOS sqrt(K L/(K+1)) + diffuse CN(0, L/(K+1)).
+
+    ``k_factor`` is the per-device K (linear), broadcast against gains;
+    E|h|^2 = Lambda exactly.  Jit-friendly: params are plain arrays (the
+    scenario layer converts a channel.FadingSpec into them).
+    """
+    los = jnp.sqrt(gains * k_factor / (k_factor + 1.0))
+    diffuse = draw_fading(key, gains / (k_factor + 1.0))
+    return jax.lax.complex(los + diffuse.real, diffuse.imag)
+
+
+def draw_fading_nakagami(key: jax.Array, gains: jax.Array,
+                         m: jax.Array) -> jax.Array:
+    """Nakagami-m: |h|^2 ~ Gamma(m, Lambda/m), uniform phase; E|h|^2 = Lambda."""
+    kp, kph = jax.random.split(key)
+    power = jax.random.gamma(kp, m, shape=gains.shape) * gains / m
+    mag = jnp.sqrt(power)
+    phase = jax.random.uniform(kph, gains.shape, minval=0.0,
+                               maxval=2.0 * jnp.pi)
+    return jax.lax.complex(mag * jnp.cos(phase), mag * jnp.sin(phase))
+
+
 def add_receiver_noise(tree: PyTree, noise_scale, key: jax.Array) -> PyTree:
     """g + noise_scale * z per component (z ~ N(0, I))."""
     leaves, treedef = jax.tree.flatten(tree)

@@ -10,6 +10,14 @@ inversion, the transmission indicator chi_{m,t}, and the PS post-scaler; and
 component.  ``round_coeffs`` is pure jnp so schemes embed directly in a
 jit'd/pjit'd train step.
 
+Schemes are scenario-agnostic (DESIGN.md §Scenarios): they consume a
+Deployment's (gains, fading-spec) statistics at build time — the truncated
+family via the family-aware theory module — and the per-round complex h at
+run time, whatever scenario produced it.  Global-CSI schemes become
+dropout-aware automatically when the Deployment's scenario dynamics include
+device dropout (h = 0 rounds), so their channel-inversion minima bind on
+the active devices only; the ``dropout_aware`` kwarg overrides.
+
 Schemes (paper §IV):
   sca               proposed: per-device gamma_m from the SCA solver,
                     truncated channel inversion, statistical CSI at PS.
@@ -135,21 +143,42 @@ class VanillaOTA(PowerControl):
     bmax: float = 0.0
     n0: float = 0.0
     num_devices: int = 0
+    dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
         habs = jnp.abs(h)
-        c_t = self.bmax * jnp.min(habs)
         n = self.num_devices
-        s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
-        noise_scale = jnp.sqrt(self.n0) / (n * c_t)
+        if not self.dropout_aware:  # paper baseline: exact pre-scenario graph
+            c_t = self.bmax * jnp.min(habs)
+            s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
+            noise_scale = jnp.sqrt(self.n0) / (n * c_t)
+            return s, noise_scale.astype(h.real.dtype)
+        # Dropped devices (h = 0) are excluded from the inversion: the scale
+        # binds on the weakest *active* channel and only active devices are
+        # averaged (uniform over the k participants).
+        active = (habs > 0).astype(h.real.dtype)
+        k = jnp.maximum(jnp.sum(active), 1.0)
+        c_t = self.bmax * jnp.min(jnp.where(habs > 0, habs, jnp.inf))
+        s = active / k
+        noise_scale = jnp.sqrt(self.n0) / (k * c_t)
         return s, noise_scale.astype(h.real.dtype)
 
 
-def make_vanilla(deployment: Deployment, prm: OTAParams) -> VanillaOTA:
+def _dropout_aware(deployment: Deployment, override) -> bool:
+    """Default the flag from the deployment's scenario dynamics so schemes
+    built on a dropout scenario never hit the h=0 division-by-zero path."""
+    if override is not None:
+        return bool(override)
+    return getattr(deployment, "p_dropout", 0.0) > 0
+
+
+def make_vanilla(deployment: Deployment, prm: OTAParams,
+                 dropout_aware: Optional[bool] = None) -> VanillaOTA:
     n = prm.num_devices
     return VanillaOTA(name="vanilla", requires_global_csi=True,
                       p=np.full(n, 1.0 / n), bmax=_bmax(prm), n0=prm.n0,
-                      num_devices=n)
+                      num_devices=n,
+                      dropout_aware=_dropout_aware(deployment, dropout_aware))
 
 
 # ---------------------------------------------------------------------------
@@ -166,13 +195,27 @@ class OPC(PowerControl):
     gmax: float = 0.0
     num_devices: int = 0
     grid_size: int = 128
+    dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
         habs = jnp.abs(h)
         n = self.num_devices
         base = self.bmax * habs * n                  # c at which device m leaves inversion
-        c_lo = 0.02 * jnp.min(base)
-        c_hi = 50.0 * jnp.max(base)
+        if self.dropout_aware:
+            # dropped devices have base = 0: b_m = min(c/(n*0), bmax) = bmax
+            # but s_m = b_m * 0 / c = 0, so they only matter for the grid
+            # bounds — anchor those on the active channels.  An all-dropped
+            # round would give (c_lo, c_hi) = (inf, 0) and a NaN grid, so it
+            # falls back to a dummy finite bracket; s is identically 0 there
+            # and the noise is zeroed below — a no-op round, like Vanilla.
+            any_active = jnp.any(base > 0)
+            c_lo = jnp.where(any_active,
+                             0.02 * jnp.min(jnp.where(base > 0, base,
+                                                      jnp.inf)), 1.0)
+            c_hi = jnp.where(any_active, 50.0 * jnp.max(base), 2.0)
+        else:
+            c_lo = 0.02 * jnp.min(base)
+            c_hi = 50.0 * jnp.max(base)
         grid = jnp.exp(jnp.linspace(jnp.log(c_lo), jnp.log(c_hi),
                                     self.grid_size))
 
@@ -190,13 +233,17 @@ class OPC(PowerControl):
         b = jnp.minimum(c_star / (n * habs), self.bmax)
         s = (b * habs / c_star).astype(h.real.dtype)
         noise_scale = (jnp.sqrt(self.n0) / c_star).astype(h.real.dtype)
+        if self.dropout_aware:
+            noise_scale = jnp.where(any_active, noise_scale, 0.0)
         return s, noise_scale
 
 
-def make_opc(deployment: Deployment, prm: OTAParams) -> OPC:
+def make_opc(deployment: Deployment, prm: OTAParams,
+             dropout_aware: Optional[bool] = None) -> OPC:
     n = prm.num_devices
     return OPC(name="opc", requires_global_csi=True, p=np.full(n, 1.0 / n),
-               bmax=_bmax(prm), n0=prm.n0, gmax=prm.gmax, num_devices=n)
+               bmax=_bmax(prm), n0=prm.n0, gmax=prm.gmax, num_devices=n,
+               dropout_aware=_dropout_aware(deployment, dropout_aware))
 
 
 # ---------------------------------------------------------------------------
@@ -210,9 +257,15 @@ class BBFL(PowerControl):
     bmax: float = 0.0
     n0: float = 0.0
     num_devices: int = 0
+    dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
     def _coeffs_for_mask(self, habs, mask):
-        k = jnp.sum(mask)
+        if self.dropout_aware:
+            # scheduled devices that dropped out (h = 0) cannot transmit
+            mask = mask * (habs > 0).astype(habs.dtype)
+        # make_bbfl guarantees >= 1 scheduled device, so the max() guard only
+        # binds in the dropout case (all scheduled devices out this round)
+        k = jnp.maximum(jnp.sum(mask), 1.0)
         c_t = self.bmax * jnp.min(jnp.where(mask > 0, habs, jnp.inf))
         s = mask / k
         noise_scale = jnp.sqrt(self.n0) / (k * c_t)
@@ -233,7 +286,8 @@ class BBFL(PowerControl):
 
 
 def make_bbfl(deployment: Deployment, prm: OTAParams, alternative: bool,
-              r_in_frac: float = 0.6) -> BBFL:
+              r_in_frac: float = 0.6,
+              dropout_aware: Optional[bool] = None) -> BBFL:
     r_in = r_in_frac * deployment.cfg.r_max
     mask = (deployment.distances <= r_in).astype(np.float64)
     if mask.sum() == 0:  # degenerate deployment: keep the closest device
@@ -245,7 +299,8 @@ def make_bbfl(deployment: Deployment, prm: OTAParams, alternative: bool,
     p = (mask / k) if not alternative else 0.5 * (mask / k) + 0.5 / n
     return BBFL(name=name, requires_global_csi=True, p=p, mask=mask,
                 alternative=alternative, bmax=_bmax(prm), n0=prm.n0,
-                num_devices=n)
+                num_devices=n,
+                dropout_aware=_dropout_aware(deployment, dropout_aware))
 
 
 # ---------------------------------------------------------------------------
@@ -280,9 +335,9 @@ def make_power_control(name: str, deployment: Deployment, prm: OTAParams,
     if name == "lcpc":
         return make_lcpc(deployment, prm, **kw)
     if name == "vanilla":
-        return make_vanilla(deployment, prm)
+        return make_vanilla(deployment, prm, **kw)
     if name == "opc":
-        return make_opc(deployment, prm)
+        return make_opc(deployment, prm, **kw)
     if name == "bbfl_interior":
         return make_bbfl(deployment, prm, alternative=False, **kw)
     if name == "bbfl_alternative":

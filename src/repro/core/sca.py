@@ -89,11 +89,13 @@ def _subproblem(anchor_gh, anchor_p, anchor_ah, prm: OTAParams,
         return obj
 
     def con_11c(x):
-        # ln gamma - gamma^2 G^2/(d Lam Es) - ln(a_bar p_bar) - a/a_bar - p/p_bar + 2 >= 0
+        # ln alpha_m(gamma) - ln(a_bar p_bar) - a/a_bar - p/p_bar + 2 >= 0
+        # (Rayleigh: ln alpha_m = ln gamma - gamma^2 G^2/(d Lam Es) exactly;
+        # other fading families use their closed-form E[chi].)
         gh, p, ah = split(x)
         gamma = gh * gmax_arr
         alpha = ah * a0
-        rhs = np.log(gamma) - theory.trunc_exponent(gamma, prm)
+        rhs = theory.log_alpha_of_gamma(gamma, prm)
         lhs = np.log(a_bar * p_bar) + alpha / a_bar + p / p_bar - 2.0
         return rhs - lhs
 

@@ -1,0 +1,393 @@
+"""Scenario engine for heterogeneous wireless deployments (DESIGN.md §Scenarios).
+
+The paper's experiments realize exactly one scenario family: devices
+area-uniform in a disk, log-distance path loss, i.i.d. flat Rayleigh fading.
+The bias-variance trade-off it studies, however, is driven by *wireless
+heterogeneity* — which has four largely independent axes.  A ``Scenario``
+composes one choice per axis:
+
+    geometry     where devices sit: uniform disk (baseline), annular ring,
+                 two-cluster near/far, fixed-distance grid
+    large-scale  log-distance path loss, optionally with log-normal
+                 shadowing (ShadowingSpec, sigma in dB)
+    small-scale  fading family: Rayleigh / Rician(K) / Nakagami-m
+                 (channel.FadingSpec, per-device parameters allowed)
+    dynamics     round-to-round behaviour: i.i.d. (baseline), Gauss-Markov
+                 correlated fading (rho), round-level device dropout
+
+``realize`` turns a Scenario into an ordinary ``channel.Deployment`` — the
+(gains, fading-spec) interface every PowerControl scheme and ``fl.server``
+round function already consumes — so SCA/LCPC/vanilla/OPC/BB-FL run
+unchanged on any scenario.  ``make_fading_process`` builds the matching
+jit-friendly per-round sampler (stateful for Gauss-Markov / dropout).  The
+baseline ``disk_rayleigh`` scenario reproduces ``channel.deploy`` and the
+pre-scenario training path bit-for-bit.
+
+A registry of named scenarios (``get_scenario`` / ``register_scenario``)
+feeds the sweep runner in ``benchmarks/scenario_sweep.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel, ota
+from repro.core.channel import (Deployment, FadingSpec, RAYLEIGH,
+                                WirelessConfig)
+from repro.core.theory import OTAParams
+
+# ---------------------------------------------------------------------------
+# Axis specs
+# ---------------------------------------------------------------------------
+
+GEOMETRIES = ("disk", "ring", "two_cluster", "grid")
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometrySpec:
+    """Deployment geometry.  Distances are in meters, relative to the PS.
+
+    disk         area-uniform in [0, r_max] (identical sampling to
+                 channel.deploy — the paper baseline)
+    ring         area-uniform in the annulus [r_min, r_max]
+    two_cluster  near_frac of devices ~ N(near_center, cluster_spread),
+                 the rest ~ N(far_center, cluster_spread)
+    grid         deterministic distances: ``distances`` if given, else
+                 linspace(max(r_min, 1), r_max, N)
+    """
+    kind: str = "disk"
+    r_min: float = 0.0
+    near_frac: float = 0.5
+    near_center: float = 150.0
+    far_center: float = 1600.0
+    cluster_spread: float = 50.0
+    distances: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.kind not in GEOMETRIES:
+            raise ValueError(f"unknown geometry {self.kind!r}; "
+                             f"available: {GEOMETRIES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShadowingSpec:
+    """Log-normal shadowing on top of path loss: PL_dB += N(0, sigma_db^2)."""
+    sigma_db: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicsSpec:
+    """Round-to-round channel dynamics.
+
+    rho        Gauss-Markov correlation of the scattered component across
+               rounds: d_t = rho d_{t-1} + sqrt(1-rho^2) w_t (stationary
+               marginal preserved; rho=0 is the i.i.d. paper baseline).
+               Supported for rayleigh/rician (Gaussian scattered part).
+    p_dropout  probability a device drops out of a round entirely
+               (straggler/outage model): its channel is observed as h=0,
+               which every scheme maps to non-participation.
+    """
+    rho: float = 0.0
+    p_dropout: float = 0.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.rho < 1.0):
+            raise ValueError("rho in [0, 1)")
+        if not (0.0 <= self.p_dropout < 1.0):
+            raise ValueError("p_dropout in [0, 1)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Composable (geometry x large-scale x small-scale x dynamics) spec."""
+    name: str
+    geometry: GeometrySpec = GeometrySpec()
+    fading: FadingSpec = RAYLEIGH
+    shadowing: Optional[ShadowingSpec] = None
+    dynamics: DynamicsSpec = DynamicsSpec()
+    wireless: WirelessConfig = WirelessConfig()
+    description: str = ""
+
+    def __post_init__(self):
+        if self.fading.family == "nakagami" and self.dynamics.rho > 0:
+            raise ValueError("Gauss-Markov dynamics need a Gaussian scattered "
+                             "component (rayleigh/rician); nakagami has none")
+        n = self.wireless.num_devices
+        for pname in ("rician_k", "nakagami_m"):
+            v = np.asarray(getattr(self.fading, pname), dtype=np.float64)
+            if v.ndim > 0 and v.shape != (n,):
+                raise ValueError(
+                    f"per-device {pname} has shape {v.shape} but the "
+                    f"scenario deploys {n} devices")
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_baseline(self) -> bool:
+        """True iff this is the paper's disk-Rayleigh-iid family."""
+        return (self.geometry.kind == "disk" and self.shadowing is None
+                and self.fading.family == "rayleigh"
+                and self.dynamics == DynamicsSpec())
+
+
+# ---------------------------------------------------------------------------
+# Realization: Scenario -> Deployment
+# ---------------------------------------------------------------------------
+
+def sample_distances(geom: GeometrySpec, cfg: WirelessConfig,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Draw [N] device distances for the given geometry.
+
+    The disk branch consumes the rng stream exactly like channel.deploy so
+    the baseline scenario reproduces the paper deployment bit-for-bit.
+    """
+    n, r_max = cfg.num_devices, cfg.r_max
+    if geom.kind == "disk":
+        u = rng.uniform(size=n)
+        dist = r_max * np.sqrt(u)
+    elif geom.kind == "ring":
+        u = rng.uniform(size=n)
+        dist = np.sqrt(geom.r_min**2 + u * (r_max**2 - geom.r_min**2))
+    elif geom.kind == "two_cluster":
+        n_near = int(np.clip(round(geom.near_frac * n), 1, n - 1))
+        centers = np.where(np.arange(n) < n_near, geom.near_center,
+                           geom.far_center)
+        dist = centers + rng.standard_normal(n) * geom.cluster_spread
+        dist = np.minimum(dist, r_max)
+    elif geom.kind == "grid":
+        if geom.distances is not None:
+            dist = np.asarray(geom.distances, dtype=np.float64)
+            if dist.shape != (n,):
+                raise ValueError(f"grid distances {dist.shape} != ({n},)")
+        else:
+            dist = np.linspace(max(geom.r_min, 1.0), r_max, n)
+    else:  # unreachable: GeometrySpec validates kind
+        raise ValueError(geom.kind)
+    return np.maximum(np.asarray(dist, dtype=np.float64), 1.0)
+
+
+def realize(scenario: Scenario, seed: Optional[int] = None) -> Deployment:
+    """Sample a concrete Deployment: distances, (shadowed) gains, fading spec.
+
+    Deterministic given the wireless seed; pass ``seed`` to override it.
+    """
+    cfg = scenario.wireless
+    if seed is not None:
+        cfg = dataclasses.replace(cfg, seed=seed)
+    rng = np.random.default_rng(cfg.seed)
+    distances = sample_distances(scenario.geometry, cfg, rng)
+    gains = channel.average_gain(distances, cfg.pl0_db, cfg.pl_exponent)
+    shadow_db = None
+    if scenario.shadowing is not None and scenario.shadowing.sigma_db > 0:
+        shadow_db = rng.normal(0.0, scenario.shadowing.sigma_db,
+                               size=cfg.num_devices)
+        gains = gains * 10.0 ** (-shadow_db / 10.0)
+    return Deployment(cfg=cfg, distances=distances, gains=gains,
+                      fading=scenario.fading, shadowing_db=shadow_db,
+                      p_dropout=scenario.dynamics.p_dropout)
+
+
+def make_ota_params(dep: Deployment, d: int, gmax: float,
+                    sigma_sq: Optional[np.ndarray] = None,
+                    **kw) -> OTAParams:
+    """Family-aware OTAParams from a realized deployment (carries the
+    scenario's fading spec and dropout rate into the statistical CSI)."""
+    spec = dep.fading
+    if spec is not None and spec.family == "rayleigh":
+        spec = None   # keep the exact Rayleigh closed-form fast path
+    if sigma_sq is None:
+        sigma_sq = np.zeros(dep.num_devices)
+    return OTAParams(d=d, gmax=gmax, es=dep.cfg.energy_per_sample,
+                     n0=dep.cfg.noise_psd, gains=dep.gains,
+                     sigma_sq=sigma_sq, fading=spec,
+                     dropout=dep.p_dropout, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Per-round fading process (jit-friendly; duck-typed by fl.server)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FadingProcess:
+    """Stateful per-round sampler h_t for a realized deployment.
+
+    ``init(key) -> state`` and ``step(state, key) -> (state, h)`` embed in a
+    jit'd round function; ``state`` is the scattered (Gauss-Markov) channel
+    component, a complex [N] array (unused but threaded for the i.i.d. case
+    so the round-function signature is static).
+
+    For rho == 0 and p_dropout == 0, ``step`` consumes the key exactly like
+    ``ota.draw_fading`` in the pre-scenario path — the baseline training
+    trajectory is bit-for-bit identical.
+    """
+    gains: jnp.ndarray
+    family: str = "rayleigh"
+    k_factor: Optional[jnp.ndarray] = None    # rician
+    m: Optional[jnp.ndarray] = None           # nakagami
+    rho: float = 0.0
+    p_dropout: float = 0.0
+
+    def _draw_iid(self, key: jax.Array) -> jax.Array:
+        if self.family == "rayleigh":
+            return ota.draw_fading(key, self.gains)
+        if self.family == "rician":
+            return ota.draw_fading_rician(key, self.gains, self.k_factor)
+        return ota.draw_fading_nakagami(key, self.gains, self.m)
+
+    def _diffuse_gains(self) -> jnp.ndarray:
+        if self.family == "rician":
+            return self.gains / (self.k_factor + 1.0)
+        return self.gains
+
+    def _los(self) -> jnp.ndarray:
+        if self.family == "rician":
+            return jnp.sqrt(self.gains * self.k_factor / (self.k_factor + 1.0))
+        return jnp.zeros_like(self.gains)
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Stationary scattered-component draw (state for Markov dynamics)."""
+        return ota.draw_fading(key, self._diffuse_gains())
+
+    def step(self, state: jax.Array, key: jax.Array):
+        if self.rho == 0.0 and self.p_dropout == 0.0:
+            return state, self._draw_iid(key)
+        k_fade, k_drop = jax.random.split(key)
+        if self.rho > 0.0:
+            w = ota.draw_fading(k_fade, self._diffuse_gains())
+            state = self.rho * state + np.sqrt(1.0 - self.rho**2) * w
+            h = jax.lax.complex(self._los() + state.real, state.imag)
+        else:
+            h = self._draw_iid(k_fade)
+        if self.p_dropout > 0.0:
+            keep = jax.random.bernoulli(k_drop, 1.0 - self.p_dropout,
+                                        self.gains.shape)
+            h = jnp.where(keep, h, jnp.zeros_like(h))
+        return state, h
+
+
+def make_fading_process(dep: Deployment,
+                        dynamics: Optional[DynamicsSpec] = None
+                        ) -> FadingProcess:
+    """Build the jit-friendly sampler matching a deployment's fading spec."""
+    spec = dep.fading_spec
+    dyn = dynamics if dynamics is not None else DynamicsSpec()
+    if spec.family == "nakagami" and dyn.rho > 0:
+        raise ValueError("Gauss-Markov dynamics unsupported for nakagami")
+    n = dep.num_devices
+    gains = jnp.asarray(dep.gains)
+    k_factor = m = None
+    if spec.family == "rician":
+        k_factor = jnp.asarray(np.broadcast_to(
+            np.asarray(spec.rician_k, np.float64), (n,)))
+    if spec.family == "nakagami":
+        m = jnp.asarray(np.broadcast_to(
+            np.asarray(spec.nakagami_m, np.float64), (n,)))
+    return FadingProcess(gains=gains, family=spec.family, k_factor=k_factor,
+                         m=m, rho=dyn.rho, p_dropout=dyn.p_dropout)
+
+
+def scenario_fading_process(scenario: Scenario,
+                            dep: Optional[Deployment] = None) -> FadingProcess:
+    if dep is None:
+        dep = realize(scenario)
+    return make_fading_process(dep, scenario.dynamics)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario, overwrite: bool = False) -> Scenario:
+    if sc.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {sc.name!r} already registered")
+    _REGISTRY[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"available: {scenario_names()}")
+    return _REGISTRY[name]
+
+
+def scenario_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register_scenario(Scenario(
+    name="disk_rayleigh",
+    description="Paper baseline: area-uniform disk, log-distance path loss, "
+                "i.i.d. Rayleigh (bit-identical to channel.deploy)."))
+
+register_scenario(Scenario(
+    name="disk_rician",
+    fading=FadingSpec(family="rician", rician_k=5.0),
+    description="Disk deployment with LOS-rich Rician fading, K = 5."))
+
+register_scenario(Scenario(
+    name="disk_rician_mixed",
+    fading=FadingSpec(family="rician",
+                      rician_k=(10.0, 10.0, 10.0, 10.0, 10.0,
+                                0.5, 0.5, 0.5, 0.5, 0.5)),
+    description="Per-device K-factor: half the fleet near-LOS (K=10), half "
+                "heavily scattered (K=0.5)."))
+
+register_scenario(Scenario(
+    name="disk_nakagami",
+    fading=FadingSpec(family="nakagami", nakagami_m=2.0),
+    description="Disk deployment with milder-than-Rayleigh Nakagami-2 fading."))
+
+register_scenario(Scenario(
+    name="disk_shadowed",
+    shadowing=ShadowingSpec(sigma_db=8.0),
+    description="Disk + 8 dB log-normal shadowing on top of path loss."))
+
+register_scenario(Scenario(
+    name="two_cluster",
+    geometry=GeometrySpec(kind="two_cluster"),
+    description="Near/far clusters (150 m vs 1600 m): the extreme "
+                "heterogeneity regime where bias control matters most."))
+
+register_scenario(Scenario(
+    name="ring",
+    geometry=GeometrySpec(kind="ring", r_min=1000.0),
+    fading=FadingSpec(family="nakagami", nakagami_m=1.5),
+    description="Cell-edge annulus (1000-1750 m) with Nakagami-1.5 fading: "
+                "homogeneous gains, weak channels."))
+
+register_scenario(Scenario(
+    name="disk_markov",
+    dynamics=DynamicsSpec(rho=0.95),
+    description="Disk-Rayleigh with Gauss-Markov round correlation rho=0.95 "
+                "(slow fading relative to the round cadence)."))
+
+register_scenario(Scenario(
+    name="disk_dropout",
+    dynamics=DynamicsSpec(p_dropout=0.1),
+    description="Disk-Rayleigh where each device independently drops out of "
+                "10% of rounds (outage/straggler model)."))
+
+register_scenario(Scenario(
+    name="urban_canyon",
+    geometry=GeometrySpec(kind="two_cluster", near_center=120.0,
+                          far_center=1500.0, cluster_spread=80.0),
+    fading=FadingSpec(family="rician",
+                      rician_k=(8.0, 8.0, 8.0, 8.0, 8.0,
+                                0.8, 0.8, 0.8, 0.8, 0.8)),
+    shadowing=ShadowingSpec(sigma_db=6.0),
+    dynamics=DynamicsSpec(rho=0.9, p_dropout=0.05),
+    description="Everything at once: clustered geometry, shadowing, mixed "
+                "Rician K, correlated fading, 5% dropout."))
+
+# The default grid the benchmarks sweep (>= 4 families, baseline first).
+SWEEP_FAMILIES = ("disk_rayleigh", "disk_rician", "disk_shadowed",
+                  "two_cluster")

@@ -7,7 +7,15 @@ objective.
 Key maps (paper eqs. (5)-(10)):
 
     chi threshold:  |h| >= Gmax * gamma_m / sqrt(d * Es)
-    E[chi_m]      = exp(-gamma_m^2 Gmax^2 / (d Lambda_m Es))      (Rayleigh)
+    E[chi_m]      = P(|h_m| >= threshold)
+                  = exp(-gamma_m^2 Gmax^2 / (d Lambda_m Es))      (Rayleigh)
+
+Off-Rayleigh (OTAParams.fading set to a rician/nakagami FadingSpec —
+DESIGN.md §Scenarios), E[chi_m] comes from the family's magnitude survival
+function (channel.fading_magnitude_sf) and the alpha_m maximizer gamma_max
+is found numerically on the same increasing-then-decreasing branch; the
+rest of the Theorem-1 algebra (zeta, bias, the (P1) objective) only sees
+alpha_m and is family-agnostic.
     alpha_m(gamma)= gamma_m * E[chi_m]
     alpha         = sum_m alpha_m          (PS post-scaler)
     p_m           = alpha_m / alpha        (average participation level)
@@ -28,6 +36,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.channel import FadingSpec, fading_magnitude_sf
+
 
 @dataclasses.dataclass(frozen=True)
 class OTAParams:
@@ -41,10 +51,16 @@ class OTAParams:
     eta: float = 0.01         # learning rate (enters P1 objective weight)
     lsmooth: float = 1.0      # L-smoothness constant
     kappa_sq: float = 1.0     # kappa^2: gradient dissimilarity bound
+    fading: Optional[FadingSpec] = None   # None = Rayleigh (paper baseline)
+    dropout: float = 0.0      # per-round device dropout prob (scenario dynamics)
 
     @property
     def num_devices(self) -> int:
         return int(np.asarray(self.gains).shape[0])
+
+    @property
+    def is_rayleigh(self) -> bool:
+        return self.fading is None or self.fading.family == "rayleigh"
 
     def replace(self, **kw) -> "OTAParams":
         return dataclasses.replace(self, **kw)
@@ -61,8 +77,33 @@ def trunc_exponent(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
 
 
 def expected_participation_indicator(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
-    """E[chi_{m,t}] = exp(-gamma^2 Gmax^2 / (d Lambda Es)) under Rayleigh."""
-    return np.exp(-trunc_exponent(gamma, p))
+    """E[chi_{m,t}] = (1 - p_dropout) * P(|h_m| >= chi_threshold(gamma_m)).
+
+    A dropped-out device presents h = 0 and never clears the threshold, so
+    round dropout scales E[chi] by (1 - p_dropout).  Rayleigh keeps the
+    exact paper eq. (5) closed form exp(-gamma^2 Gmax^2 / (d Lambda Es));
+    other families use the FadingSpec's magnitude survival function
+    (channel.fading_magnitude_sf).
+    """
+    if p.is_rayleigh:
+        sf = np.exp(-trunc_exponent(gamma, p))
+    else:
+        sf = fading_magnitude_sf(p.gains, chi_threshold(gamma, p), p.fading)
+    if p.dropout > 0:
+        sf = (1.0 - p.dropout) * sf
+    return sf
+
+
+def log_alpha_of_gamma(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
+    """ln alpha_m(gamma).  Rayleigh keeps the exact cancellation-free form
+    ln(gamma) - trunc_exponent used by the SCA constraint (11c)."""
+    gamma = np.asarray(gamma, dtype=np.float64)
+    if p.is_rayleigh:
+        out = np.log(gamma) - trunc_exponent(gamma, p)
+        if p.dropout > 0:
+            out = out + np.log1p(-p.dropout)
+        return out
+    return np.log(np.maximum(alpha_of_gamma(gamma, p), 1e-300))
 
 
 def alpha_of_gamma(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
@@ -70,14 +111,40 @@ def alpha_of_gamma(gamma: np.ndarray, p: OTAParams) -> np.ndarray:
     return np.asarray(gamma, dtype=np.float64) * expected_participation_indicator(gamma, p)
 
 
-def gamma_max(p: OTAParams) -> np.ndarray:
-    """Maximizer of alpha_m(gamma): gamma_{m,max} = sqrt(d Lambda Es / (2 Gmax^2))."""
+def _rayleigh_gamma_max(p: OTAParams) -> np.ndarray:
     return np.sqrt(p.d * p.gains * p.es / (2.0 * p.gmax**2))
 
 
+def gamma_max(p: OTAParams) -> np.ndarray:
+    """Maximizer of alpha_m(gamma) per device.
+
+    Rayleigh: closed form gamma_{m,max} = sqrt(d Lambda Es / (2 Gmax^2)).
+    Other families: alpha_m(gamma) = gamma * SF(c gamma) is still unimodal
+    (SF log-concave for Rician and Nakagami m >= 1/2), so a two-stage log
+    grid around the Rayleigh maximizer finds it to ~1e-4 relative accuracy.
+    """
+    g_ray = _rayleigh_gamma_max(p)
+    if p.is_rayleigh:
+        return g_ray
+
+    def argmax_on(grid):  # grid: [N, G]
+        chi = chi_threshold(grid, p)
+        vals = grid * fading_magnitude_sf(p.gains[:, None], chi, p.fading)
+        return grid[np.arange(grid.shape[0]), np.argmax(vals, axis=1)]
+
+    coarse = argmax_on(g_ray[:, None] * np.geomspace(0.05, 20.0, 241)[None, :])
+    fine = argmax_on(coarse[:, None] * np.geomspace(0.95, 1.05, 101)[None, :])
+    return fine
+
+
 def alpha_max(p: OTAParams) -> np.ndarray:
-    """alpha_{m,max} = alpha_m(gamma_{m,max}) = sqrt(d Lambda Es / (2 e Gmax^2))."""
-    return np.sqrt(p.d * p.gains * p.es / (2.0 * np.e * p.gmax**2))
+    """alpha_{m,max} = alpha_m(gamma_{m,max})  (= sqrt(d Lambda Es / (2 e
+    Gmax^2)) in closed form under Rayleigh; dropout scales it by 1-p since
+    it rescales alpha_m uniformly without moving the maximizer)."""
+    if p.is_rayleigh:
+        amax = np.sqrt(p.d * p.gains * p.es / (2.0 * np.e * p.gmax**2))
+        return (1.0 - p.dropout) * amax if p.dropout > 0 else amax
+    return alpha_of_gamma(gamma_max(p), p)
 
 
 def chi_threshold(gamma: np.ndarray, p: OTAParams) -> np.ndarray:

@@ -87,3 +87,17 @@ def batch_logical():
     if mesh is not None and "pod" in mesh.axis_names:
         return "batch_pod"
     return "batch"
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (unchecked-replication mode).
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=False)``; older releases
+    only have ``jax.experimental.shard_map.shard_map(..., check_rep=False)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shmap
+    return _shmap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)

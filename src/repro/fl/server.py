@@ -6,6 +6,12 @@ examples share this runtime.  Devices are vmapped over stacked local
 datasets [N, D, ...]; gradients are norm-clipped to G_max (Assumption 2),
 uploaded through a PowerControl scheme via core.ota, and the PS applies the
 plain SGD update of eq. (7).
+
+The wireless side is scenario-pluggable (DESIGN.md §Scenarios): by default
+rounds draw i.i.d. Rayleigh fading from ``gains``; pass a
+scenarios.FadingProcess to run any registered scenario family (Rician,
+Nakagami, Gauss-Markov correlated rounds, device dropout) through the same
+jit'd round function.
 """
 from __future__ import annotations
 
@@ -36,8 +42,19 @@ class FLRunConfig:
 
 
 def make_round_fn(loss_fn: Callable, scheme: PowerControl,
-                  gains: np.ndarray, run: FLRunConfig):
-    """Returns jit'd (params, stacked_batch, key) -> (params, metrics)."""
+                  gains: np.ndarray, run: FLRunConfig, fading=None):
+    """Returns the jit'd round function.
+
+    Default (fading None — the paper's i.i.d. Rayleigh channel):
+        (params, stacked_batch, key) -> (params, metrics).
+    With ``fading`` (a scenarios.FadingProcess or any object exposing
+    ``step(state, key) -> (state, h)``), the per-round channel comes from the
+    process and its state is threaded through:
+        (params, stacked_batch, key, fading_state)
+            -> (params, metrics, fading_state).
+    For an i.i.d. process the two paths consume keys identically, so the
+    baseline scenario reproduces the default path bit-for-bit.
+    """
     gains_j = jnp.asarray(gains)
 
     def device_grad(params, batch):
@@ -49,11 +66,7 @@ def make_round_fn(loss_fn: Callable, scheme: PowerControl,
                                 for l in jax.tree.leaves(g)))
         return g, norm
 
-    def round_fn(params, stacked_batch, key):
-        k_fade, k_ota, k_batch = jax.random.split(key, 3)
-        grads, norms = jax.vmap(lambda b: device_grad(params, b))(
-            stacked_batch)
-        h = ota.draw_fading(k_fade, gains_j)
+    def finish_round(params, grads, norms, h, k_ota):
         g_hat = ota.ota_aggregate(grads, scheme, h, k_ota)
         new_params = jax.tree.map(
             lambda p, g: (p.astype(jnp.float32)
@@ -65,6 +78,24 @@ def make_round_fn(loss_fn: Callable, scheme: PowerControl,
             "active_devices": jnp.sum((s > 0).astype(jnp.float32)),
         }
         return new_params, metrics
+
+    if fading is None:
+        def round_fn(params, stacked_batch, key):
+            k_fade, k_ota, k_batch = jax.random.split(key, 3)
+            grads, norms = jax.vmap(lambda b: device_grad(params, b))(
+                stacked_batch)
+            h = ota.draw_fading(k_fade, gains_j)
+            return finish_round(params, grads, norms, h, k_ota)
+
+        return jax.jit(round_fn)
+
+    def round_fn(params, stacked_batch, key, fading_state):
+        k_fade, k_ota, k_batch = jax.random.split(key, 3)
+        grads, norms = jax.vmap(lambda b: device_grad(params, b))(
+            stacked_batch)
+        fading_state, h = fading.step(fading_state, k_fade)
+        new_params, metrics = finish_round(params, grads, norms, h, k_ota)
+        return new_params, metrics, fading_state
 
     return jax.jit(round_fn)
 
@@ -81,24 +112,36 @@ def _sample_batches(x_dev, y_dev, batch_size: int, rng: np.random.Generator):
 
 def run_fl(loss_fn: Callable, params: PyTree, scheme: PowerControl,
            gains: np.ndarray, data: tuple, run: FLRunConfig,
-           eval_fn: Optional[Callable] = None, log: bool = False):
+           eval_fn: Optional[Callable] = None, log: bool = False,
+           fading=None):
     """Run the full FL loop.
 
     data = (x_dev [N,D,...], y_dev [N,D]) stacked per-device datasets.
     eval_fn(params) -> dict of scalars, called every run.eval_every rounds.
+    fading: optional scenarios.FadingProcess drawing the per-round channel
+    (None = the paper's i.i.d. Rayleigh on ``gains``); its state is
+    initialized from a key folded out of the run seed so the main key
+    stream is untouched.
     Returns (params, history list of dicts).
     """
-    round_fn = make_round_fn(loss_fn, scheme, gains, run)
+    round_fn = make_round_fn(loss_fn, scheme, gains, run, fading=fading)
     x_dev, y_dev = data
     rng = np.random.default_rng(run.seed)
     key = jax.random.PRNGKey(run.seed)
+    fading_state = None
+    if fading is not None:
+        fading_state = fading.init(jax.random.fold_in(key, 0x5CE7A810))
     history = []
     t0 = time.time()
     for t in range(run.num_rounds):
         key, sub = jax.random.split(key)
         xb, yb = _sample_batches(x_dev, y_dev, run.batch_size, rng)
-        params, metrics = round_fn(params, (jnp.asarray(xb),
-                                            jnp.asarray(yb)), sub)
+        batch = (jnp.asarray(xb), jnp.asarray(yb))
+        if fading is None:
+            params, metrics = round_fn(params, batch, sub)
+        else:
+            params, metrics, fading_state = round_fn(params, batch, sub,
+                                                     fading_state)
         if eval_fn is not None and (t % run.eval_every == 0
                                     or t == run.num_rounds - 1):
             ev = {k: float(v) for k, v in eval_fn(params).items()}

@@ -1,0 +1,15 @@
+"""Shared test helpers (no optional dependencies — importable everywhere)."""
+import numpy as np
+
+from repro.core import channel
+from repro.core.theory import OTAParams
+
+
+def make_prm(gains, d=10000, gmax=10.0, sigma=0.0, eta=0.05, kappa_sq=4.0,
+             fading=None):
+    gains = np.asarray(gains, dtype=np.float64)
+    wcfg = channel.WirelessConfig(num_devices=len(gains))
+    return OTAParams(d=d, gmax=gmax, es=wcfg.energy_per_sample,
+                     n0=wcfg.noise_psd, gains=gains,
+                     sigma_sq=np.full(len(gains), sigma), eta=eta,
+                     lsmooth=1.0, kappa_sq=kappa_sq, fading=fading)

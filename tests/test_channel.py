@@ -48,7 +48,7 @@ def test_fading_quantile_matches_rayleigh():
 def test_truncation_probability_matches_theory():
     """P(chi=1) = exp(-thr^2/Lambda) — the alpha_m formula's core."""
     from repro.core import theory
-    from tests.test_theory import make_prm
+    from tests.helpers import make_prm
     gains = np.array([1e-12, 4e-12])
     prm = make_prm(gains)
     gamma = 0.7 * theory.gamma_max(prm)

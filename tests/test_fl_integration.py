@@ -9,7 +9,7 @@ from repro.data import partition, synthetic
 from repro.fl.server import FLRunConfig, make_round_fn, run_fl
 from repro.models import mlp
 from repro.models.param import init_params
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 
 @pytest.fixture(scope="module")

@@ -7,7 +7,7 @@ import pytest
 from repro.core import channel, ota, power_control as pcm
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 N, D = 10, 400
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import channel, ota, power_control as pcm
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 N = 10
 

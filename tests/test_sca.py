@@ -1,10 +1,11 @@
 """SCA power-control solver: descent, convergence, solution quality."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import channel, sca, theory
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 
 @pytest.fixture(scope="module")

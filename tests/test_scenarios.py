@@ -1,0 +1,366 @@
+"""Scenario engine: per-family statistics, geometry, dynamics, FL plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, ota, power_control as pcm, scenarios as scn
+from repro.core import theory
+from repro.core.channel import FadingSpec
+from tests.helpers import make_prm
+
+GAINS = np.array([1e-12, 5e-12, 2e-11, 8e-11])
+
+
+# ---------------------------------------------------------------------------
+# Small-scale families: mean power, quantiles, participation statistics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    None,
+    FadingSpec("rician", rician_k=4.0),
+    FadingSpec("rician", rician_k=np.array([0.5, 2.0, 8.0, 20.0])),
+    FadingSpec("nakagami", nakagami_m=2.0),
+    FadingSpec("nakagami", nakagami_m=np.array([0.6, 1.0, 2.0, 4.0])),
+], ids=["rayleigh", "rician", "rician_per_device", "nakagami",
+        "nakagami_per_device"])
+def test_mean_power_matches_gains(spec):
+    """E|h_m|^2 = Lambda_m for every family (numpy sampler)."""
+    rng = np.random.default_rng(0)
+    h = channel.draw_fading(rng, GAINS, num_rounds=200_000, spec=spec)
+    emp = np.mean(np.abs(h) ** 2, axis=0)
+    assert np.allclose(emp, GAINS, rtol=0.03)
+
+
+@pytest.mark.parametrize("family,kw", [
+    ("rician", dict(rician_k=3.0)),
+    ("nakagami", dict(nakagami_m=1.8)),
+])
+def test_jax_samplers_mean_power(family, kw):
+    """The jit-path samplers in core.ota preserve E|h|^2 = Lambda too."""
+    gains = jnp.asarray(GAINS)
+    keys = jax.random.split(jax.random.PRNGKey(1), 40_000)
+    if family == "rician":
+        draw = lambda k: ota.draw_fading_rician(k, gains, kw["rician_k"])
+    else:
+        draw = lambda k: ota.draw_fading_nakagami(k, gains, kw["nakagami_m"])
+    h = jax.vmap(draw)(keys)
+    emp = np.asarray(jnp.mean(jnp.abs(h) ** 2, axis=0))
+    assert np.allclose(emp, GAINS, rtol=0.05)
+
+
+@pytest.mark.parametrize("spec", [
+    None,
+    FadingSpec("rician", rician_k=4.0),
+    FadingSpec("nakagami", nakagami_m=2.5),
+], ids=["rayleigh", "rician", "nakagami"])
+def test_magnitude_quantiles_match_empirical(spec):
+    """Closed-form fading_magnitude_quantile == empirical MC quantiles."""
+    for q in (0.1, 0.5, 0.9):
+        cf = channel.fading_magnitude_quantile(GAINS, q, spec)
+        mc = channel.fading_magnitude_quantile_mc(GAINS, q, spec,
+                                                  num_draws=200_000, seed=2)
+        assert np.allclose(cf, mc, rtol=0.02), (q, cf, mc)
+
+
+@pytest.mark.parametrize("spec", [
+    FadingSpec("rician", rician_k=4.0),
+    FadingSpec("nakagami", nakagami_m=2.5),
+], ids=["rician", "nakagami"])
+def test_participation_indicator_off_rayleigh(spec):
+    """E[chi] = SF(threshold) matches Monte Carlo for non-Rayleigh families."""
+    prm = make_prm(GAINS, fading=spec)
+    gamma = 0.8 * theory.gamma_max(prm)
+    thr = theory.chi_threshold(gamma, prm)
+    rng = np.random.default_rng(3)
+    h = np.abs(channel.draw_fading(rng, GAINS, 300_000, spec=spec))
+    emp = (h >= thr[None, :]).mean(axis=0)
+    assert np.allclose(emp, theory.expected_participation_indicator(gamma, prm),
+                       atol=0.01)
+
+
+@pytest.mark.parametrize("spec", [
+    FadingSpec("rician", rician_k=4.0),
+    FadingSpec("nakagami", nakagami_m=2.5),
+], ids=["rician", "nakagami"])
+def test_gamma_max_is_argmax_off_rayleigh(spec):
+    """The numeric gamma_max maximizes alpha_m(gamma) for each device."""
+    prm = make_prm(GAINS, fading=spec)
+    gm = theory.gamma_max(prm)
+    am = theory.alpha_max(prm)
+    for f in (0.8, 0.95, 1.05, 1.25):
+        assert np.all(theory.alpha_of_gamma(f * gm, prm) <= am * (1 + 1e-6))
+
+
+def test_nakagami_m1_reduces_to_rayleigh():
+    """Nakagami-1 IS Rayleigh: closed forms must agree."""
+    spec = FadingSpec("nakagami", nakagami_m=1.0)
+    x = np.sqrt(GAINS) * 0.7
+    assert np.allclose(channel.fading_magnitude_sf(GAINS, x, spec),
+                       channel.fading_magnitude_sf(GAINS, x, None), rtol=1e-10)
+    for q in (0.2, 0.8):
+        assert np.allclose(channel.fading_magnitude_quantile(GAINS, q, spec),
+                           channel.fading_magnitude_quantile(GAINS, q),
+                           rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Geometry and large-scale effects
+# ---------------------------------------------------------------------------
+
+def test_disk_baseline_bitwise_identical():
+    """realize(disk_rayleigh) == channel.deploy bit-for-bit."""
+    dep0 = channel.deploy(channel.WirelessConfig())
+    dep = scn.realize(scn.get_scenario("disk_rayleigh"))
+    assert np.array_equal(dep0.distances, dep.distances)
+    assert np.array_equal(dep0.gains, dep.gains)
+
+
+def test_geometries_respect_bounds():
+    cfg = channel.WirelessConfig(num_devices=200, seed=1)
+    rng = np.random.default_rng(1)
+    ring = scn.sample_distances(scn.GeometrySpec("ring", r_min=1000.0), cfg,
+                                np.random.default_rng(1))
+    assert ring.min() >= 1000.0 and ring.max() <= cfg.r_max
+    tc = scn.sample_distances(scn.GeometrySpec("two_cluster"), cfg,
+                              np.random.default_rng(2))
+    near = tc[tc < 800]
+    far = tc[tc >= 800]
+    assert len(near) and len(far)
+    assert abs(near.mean() - 150.0) < 30 and abs(far.mean() - 1600.0) < 30
+    grid = scn.sample_distances(
+        scn.GeometrySpec("grid", distances=(10.0, 20.0) * 100), cfg, rng)
+    assert np.array_equal(grid, np.array((10.0, 20.0) * 100))
+
+
+def test_shadowing_db_std_matches_config():
+    sc = scn.Scenario(name="tmp_shadow",
+                      shadowing=scn.ShadowingSpec(sigma_db=8.0),
+                      wireless=channel.WirelessConfig(num_devices=4000))
+    dep = scn.realize(sc)
+    assert dep.shadowing_db is not None
+    assert dep.shadowing_db.std() == pytest.approx(8.0, rel=0.1)
+    # shadowing is folded into gains multiplicatively
+    base = channel.average_gain(dep.distances, dep.cfg.pl0_db,
+                                dep.cfg.pl_exponent)
+    resid_db = -10 * np.log10(dep.gains / base)
+    assert np.allclose(resid_db, dep.shadowing_db)
+
+
+def test_realize_deterministic_and_seed_override():
+    sc = scn.get_scenario("two_cluster")
+    d1, d2 = scn.realize(sc), scn.realize(sc)
+    assert np.array_equal(d1.gains, d2.gains)
+    d3 = scn.realize(sc, seed=99)
+    assert not np.array_equal(d1.gains, d3.gains)
+
+
+# ---------------------------------------------------------------------------
+# Dynamics: Gauss-Markov correlation, dropout
+# ---------------------------------------------------------------------------
+
+def test_gauss_markov_autocorrelation():
+    """Lag-1 autocorrelation of the fading process ~= rho; marginal power
+    stays Lambda (stationarity)."""
+    rho = 0.9
+    dep = scn.realize(scn.get_scenario("disk_rayleigh"))
+    fp = scn.make_fading_process(dep, scn.DynamicsSpec(rho=rho))
+    state = fp.init(jax.random.PRNGKey(0))
+
+    def step(state, key):
+        state, h = fp.step(state, key)
+        return state, h
+
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    _, hs = jax.lax.scan(step, state, keys)
+    hs = np.asarray(hs)  # [T, N] complex
+    a, b = hs[:-1], hs[1:]
+    emp_rho = np.real(np.mean(a.conj() * b, axis=0)) \
+        / np.mean(np.abs(hs) ** 2, axis=0)
+    assert np.allclose(emp_rho, rho, atol=0.05)
+    assert np.allclose(np.mean(np.abs(hs) ** 2, axis=0), dep.gains, rtol=0.1)
+
+
+def test_gauss_markov_rician_keeps_los():
+    dep = scn.realize(scn.get_scenario("disk_rician"))
+    fp = scn.make_fading_process(dep, scn.DynamicsSpec(rho=0.95))
+    state = fp.init(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 3000)
+    _, hs = jax.lax.scan(lambda s, k: fp.step(s, k), state, keys)
+    emp = np.mean(np.abs(np.asarray(hs)) ** 2, axis=0)
+    assert np.allclose(emp, dep.gains, rtol=0.15)
+
+
+def test_nakagami_markov_rejected():
+    with pytest.raises(ValueError):
+        scn.Scenario(name="bad", fading=FadingSpec("nakagami"),
+                     dynamics=scn.DynamicsSpec(rho=0.5))
+    dep = scn.realize(scn.get_scenario("disk_nakagami"))
+    with pytest.raises(ValueError):
+        scn.make_fading_process(dep, scn.DynamicsSpec(rho=0.5))
+
+
+def test_dropout_rate_and_scheme_handling():
+    p_drop = 0.3
+    sc = scn.Scenario(name="tmp_dropout",
+                      dynamics=scn.DynamicsSpec(p_dropout=p_drop))
+    dep = scn.realize(sc)
+    assert dep.p_dropout == p_drop
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    state = fp.init(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 2000)
+    _, hs = jax.lax.scan(lambda s, k: fp.step(s, k), state, keys)
+    hs = np.asarray(hs)
+    assert np.mean(hs == 0) == pytest.approx(p_drop, abs=0.03)
+    # global-CSI schemes auto-derive dropout-awareness from the deployment
+    # and stay finite with h = 0 present
+    prm = scn.make_ota_params(dep, d=814090, gmax=10.0)
+    h = jnp.asarray(hs[np.argmax((hs == 0).sum(axis=1))])  # round w/ dropouts
+    for name in ("vanilla", "opc", "bbfl_interior"):
+        pc = pcm.make_power_control(name, dep, prm)
+        assert pc.dropout_aware, name
+        s, ns = pc.round_coeffs(h, jax.random.PRNGKey(2))
+        assert bool(jnp.all(jnp.isfinite(s))) and bool(jnp.isfinite(ns)), name
+        assert np.allclose(np.asarray(s)[np.asarray(h) == 0], 0.0), name
+    # baseline deployments keep the exact pre-scenario code path
+    base = scn.realize(scn.get_scenario("disk_rayleigh"))
+    assert not pcm.make_power_control("vanilla", base, prm).dropout_aware
+    # truncated inversion silences dropped devices with no special handling
+    pc = pcm.make_power_control("zero_bias", dep, prm)
+    s, _ = pc.round_coeffs(h, jax.random.PRNGKey(2))
+    assert np.allclose(np.asarray(s)[np.asarray(h) == 0], 0.0)
+
+
+def test_dropout_enters_statistical_csi():
+    """E[chi] and alpha scale by (1 - p_dropout); empirical participation
+    of a truncated scheme under dropout matches the designed p."""
+    sc = scn.Scenario(name="tmp_dropout_csi",
+                      dynamics=scn.DynamicsSpec(p_dropout=0.25))
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=814090, gmax=10.0)
+    prm0 = prm.replace(dropout=0.0)
+    gamma = 0.7 * theory.gamma_max(prm0)
+    assert np.allclose(theory.expected_participation_indicator(gamma, prm),
+                       0.75 * theory.expected_participation_indicator(gamma,
+                                                                      prm0))
+    assert np.allclose(theory.alpha_max(prm), 0.75 * theory.alpha_max(prm0))
+    assert np.allclose(theory.log_alpha_of_gamma(gamma, prm),
+                       np.log(theory.alpha_of_gamma(gamma, prm)))
+    # empirical: chi = 1{|h_eff| >= thr} with h_eff from the dropout process
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    keys = jax.random.split(jax.random.PRNGKey(3), 20_000)
+    _, hs = jax.lax.scan(lambda s, k: fp.step(s, k), fp.init(keys[0]), keys)
+    thr = theory.chi_threshold(gamma, prm)
+    emp = (np.abs(np.asarray(hs)) >= thr[None, :]).mean(axis=0)
+    assert np.allclose(emp, theory.expected_participation_indicator(gamma, prm),
+                       atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Registry + FL integration
+# ---------------------------------------------------------------------------
+
+def test_registry_realizes_everywhere():
+    for name in scn.scenario_names():
+        sc = scn.get_scenario(name)
+        dep = scn.realize(sc)
+        assert dep.num_devices == sc.wireless.num_devices
+        assert np.all(dep.gains > 0) and np.all(np.isfinite(dep.gains))
+        prm = scn.make_ota_params(dep, d=814090, gmax=10.0)
+        _, a, pm = theory.participation(0.7 * theory.gamma_max(prm), prm)
+        assert a > 0 and abs(pm.sum() - 1.0) < 1e-9, name
+        fp = scn.make_fading_process(dep, sc.dynamics)
+        st = fp.init(jax.random.PRNGKey(0))
+        st, h = fp.step(st, jax.random.PRNGKey(1))
+        assert h.shape == (dep.num_devices,), name
+
+
+def test_all_dropped_round_is_noop_not_nan():
+    """Every global-CSI scheme survives a round where all devices dropped:
+    s = 0 and noise_scale = 0 (a no-op PS update), never NaN/inf coeffs."""
+    sc = scn.Scenario(name="tmp_all_drop",
+                      dynamics=scn.DynamicsSpec(p_dropout=0.5))
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=814090, gmax=10.0)
+    h = jnp.zeros(dep.num_devices, jnp.complex64)
+    for name in ("vanilla", "opc", "bbfl_interior", "bbfl_alternative"):
+        pc = pcm.make_power_control(name, dep, prm)
+        s, ns = pc.round_coeffs(h, jax.random.PRNGKey(0))
+        assert np.allclose(np.asarray(s), 0.0), name
+        assert float(ns) == 0.0, name
+
+
+def test_per_device_fading_params_validated_against_num_devices():
+    with pytest.raises(ValueError, match="per-device"):
+        scn.get_scenario("disk_rician_mixed").replace(
+            wireless=channel.WirelessConfig(num_devices=20))
+    # matching length is fine
+    scn.get_scenario("disk_rician_mixed").replace(
+        wireless=channel.WirelessConfig(num_devices=10))
+
+
+def test_registry_rejects_unknown_and_duplicates():
+    with pytest.raises(ValueError):
+        scn.get_scenario("nope")
+    with pytest.raises(ValueError):
+        scn.register_scenario(scn.get_scenario("disk_rayleigh"))
+
+
+def test_fl_round_scenario_matches_default_path():
+    """The stateful (FadingProcess) round path is bit-identical to the
+    default i.i.d. Rayleigh path on the baseline scenario."""
+    from repro.fl.server import FLRunConfig, make_round_fn
+
+    dep = scn.realize(scn.get_scenario("disk_rayleigh"))
+    prm = scn.make_ota_params(dep, d=50, gmax=10.0)
+    pc = pcm.make_power_control("zero_bias", dep, prm)
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    params = {"w": jnp.zeros((5,), jnp.float32)}
+    n = dep.num_devices
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 8, 5))
+    y = jax.random.normal(jax.random.PRNGKey(1), (n, 8))
+    run = FLRunConfig(eta=0.05, gmax=10.0)
+
+    default_fn = make_round_fn(loss, pc, dep.gains, run)
+    fp = scn.make_fading_process(dep, scn.DynamicsSpec())
+    scenario_fn = make_round_fn(loss, pc, dep.gains, run, fading=fp)
+
+    key = jax.random.PRNGKey(42)
+    p1, m1 = default_fn(params, (x, y), key)
+    state = fp.init(jax.random.PRNGKey(7))
+    p2, m2, _ = scenario_fn(params, (x, y), key, state)
+    assert np.array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    assert float(m1["active_devices"]) == float(m2["active_devices"])
+
+
+@pytest.mark.parametrize("name", ["disk_rician", "urban_canyon"])
+def test_fl_runs_on_scenarios(name):
+    """run_fl trains through arbitrary scenarios without special-casing."""
+    from repro.fl.server import FLRunConfig, run_fl
+
+    sc = scn.get_scenario(name)
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=50, gmax=10.0)
+    pc = pcm.make_power_control("zero_bias", dep, prm)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    n = dep.num_devices
+    w_true = np.ones(5, np.float32)
+    x = np.random.default_rng(0).normal(size=(n, 32, 5)).astype(np.float32)
+    y = (x @ w_true).astype(np.float32)
+    params = {"w": jnp.zeros((5,), jnp.float32)}
+    run = FLRunConfig(eta=0.1, num_rounds=30, eval_every=29, gmax=10.0)
+    final, hist = run_fl(loss, params, pc, dep.gains, (x, y), run,
+                         eval_fn=lambda p: {"mse": loss(p, (jnp.asarray(
+                             x.reshape(-1, 5)), jnp.asarray(y.reshape(-1))))},
+                         fading=fp)
+    assert np.all(np.isfinite(np.asarray(final["w"])))
+    assert hist[-1]["mse"] < hist[0]["mse"]

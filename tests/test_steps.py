@@ -8,7 +8,7 @@ from repro import configs
 from repro.core import channel, ota, power_control as pcm
 from repro.launch import steps as steps_lib
 from repro.models.registry import build_bundle
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 ARCH = "qwen1.5-0.5b"
 N_CLIENTS = 4

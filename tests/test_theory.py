@@ -1,19 +1,13 @@
 """Theorem-1 quantities: invariants and property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import channel, theory
 from repro.core.theory import OTAParams
-
-
-def make_prm(gains, d=10000, gmax=10.0, sigma=0.0, eta=0.05, kappa_sq=4.0):
-    gains = np.asarray(gains, dtype=np.float64)
-    wcfg = channel.WirelessConfig(num_devices=len(gains))
-    return OTAParams(d=d, gmax=gmax, es=wcfg.energy_per_sample,
-                     n0=wcfg.noise_psd, gains=gains,
-                     sigma_sq=np.full(len(gains), sigma), eta=eta,
-                     lsmooth=1.0, kappa_sq=kappa_sq)
+from tests.helpers import make_prm  # re-export: kept for older imports
 
 
 @pytest.fixture(scope="module")

@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import channel, ota, power_control as pcm, theory
-from tests.test_theory import make_prm
+from tests.helpers import make_prm
 
 N, D = 10, 4000
 ROUNDS = 4000
