@@ -1,6 +1,22 @@
 """Paper Fig. 2 reproduction: test accuracy (2a) and global loss (2b) vs
 FL rounds for all seven schemes on the non-iid MNIST-like task.
 
+    PYTHONPATH=src python -m benchmarks.fig2 [--bench] [--rounds N]
+
+All seven schemes run as ONE compiled scan program (fl.engine.run_fleet,
+DESIGN.md §Engine): the schemes are stacked into a SchemeBatch pytree and
+the round loop is a chunked lax.scan vmapped over the scheme axis.  On the
+default full-batch path the fleet reproduces the pre-engine per-scheme host
+loop (kept as ``engine="legacy"``) to float rounding, with identical
+key/fading/noise streams.
+
+``--bench`` records the engine-vs-legacy wall-clock comparison for the full
+7-scheme x ``--rounds`` grid into experiments/fig2/engine_benchmark.json:
+the legacy host loop (one jitted call per round per scheme, full batch) vs
+the scan fleet in full-batch equivalence mode vs the scan fleet in
+minibatch throughput mode (on-device sampling + flattened Pallas
+aggregation) — the configuration the per-PR sweeps use.
+
 Claims validated (paper §IV):
   * Ideal FedAvg best everywhere.
   * OPC (global CSI) fastest practical; the proposed SCA design (statistical
@@ -10,6 +26,7 @@ Claims validated (paper §IV):
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -22,7 +39,8 @@ from repro.configs.paper_mlp import CONFIG as PAPER
 from repro.core import channel, power_control as pcm
 from repro.core.theory import OTAParams
 from repro.data import partition, synthetic
-from repro.fl.server import FLRunConfig, run_fl
+from repro.fl.engine import run_fleet
+from repro.fl.server import FLRunConfig, run_fl_legacy
 from repro.models import mlp
 from repro.models.param import init_params
 
@@ -31,6 +49,8 @@ SCHEMES = ["ideal", "opc", "sca", "lcpc", "vanilla", "bbfl_interior",
 # constant step sizes per scheme (grid-searched once, as in the paper)
 ETAS = {"ideal": 0.08, "opc": 0.06, "sca": 0.06, "lcpc": 0.05,
         "vanilla": 0.05, "bbfl_interior": 0.06, "bbfl_alternative": 0.06}
+# minibatch size of the engine's throughput mode (--bench; per-PR sweeps)
+BENCH_BATCH = 128
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                             "fig2")
@@ -55,35 +75,84 @@ def build_world(seed: int = 0, noise: float = 0.75,
     return dep, prm, (xd, yd), (x, y), (xt, yt)
 
 
-def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
-        schemes=SCHEMES, log=False):
-    dep, prm, data, (x, y), (xt, yt) = build_world(seed)
-    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
+def _make_eval(x, y, xt, yt):
     xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
     xg, yg = jnp.asarray(x[:4000]), jnp.asarray(y[:4000])
 
-    @jax.jit
     def evals(params):
         return {"acc": mlp.accuracy(params, xt_j, yt_j),
                 "global_loss": mlp.mlp_loss(params, (xg, yg))}
+    return evals
 
+
+def _fleet_histories(res, wall_total: float):
+    """FLResult (seed axis S=1) -> legacy-shaped {scheme: history list}."""
     histories = {}
-    for name in schemes:
-        prm_s = prm.replace(eta=ETAS.get(name, 0.05))
-        pc = pcm.make_power_control(name, dep, prm_s)
-        run_cfg = FLRunConfig(eta=ETAS.get(name, 0.05),
-                              num_rounds=num_rounds, eval_every=eval_every,
-                              gmax=PAPER.gmax, seed=seed)
-        t0 = time.time()
-        _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data,
-                         run_cfg, evals, log=log)
+    for i, name in enumerate(res.names):
+        hist = []
+        for t, ev in res.evals:
+            hist.append({
+                "acc": float(ev["acc"][i, 0]),
+                "global_loss": float(ev["global_loss"][i, 0]),
+                "round": t, "scheme": name,
+                "active": float(res.traces["active_devices"][i, 0, t]),
+                "wall": wall_total,
+            })
         histories[name] = hist
-        if log:
-            print(f"  {name}: {time.time() - t0:.1f}s")
-    os.makedirs(ARTIFACT_DIR, exist_ok=True)
-    with open(os.path.join(ARTIFACT_DIR, f"histories_seed{seed}.json"),
-              "w") as f:
-        json.dump(histories, f, indent=1)
+    return histories
+
+
+def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
+        schemes=SCHEMES, log=False, engine: str = "fleet",
+        batch_size: int = 0, save: bool = True):
+    """Fig. 2 histories for all schemes.
+
+    engine="fleet": one compiled scan program for the whole scheme grid.
+    engine="legacy": the pre-engine host loop, one scheme at a time (the
+    wall-clock baseline; bit-reproduces the committed pre-engine curves).
+    batch_size=0 is the paper's full-batch §IV protocol — on it the fleet
+    matches the legacy loop's trajectories (same seeds) to float rounding.
+    batch_size>0 switches the fleet to on-device minibatch sampling and the
+    flattened Pallas aggregation (the cheap per-PR sweep mode).
+    """
+    dep, prm, data, (x, y), (xt, yt) = build_world(seed)
+    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
+    evals = jax.jit(_make_eval(x, y, xt, yt))
+
+    if engine == "fleet":
+        run_cfg = FLRunConfig(num_rounds=num_rounds, eval_every=eval_every,
+                              gmax=PAPER.gmax, seed=seed,
+                              batch_size=batch_size)
+        pcs = [pcm.make_power_control(n, dep, prm.replace(
+            eta=ETAS.get(n, 0.05))) for n in schemes]
+        res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
+                        run_cfg, evals,
+                        etas=[ETAS.get(n, 0.05) for n in schemes],
+                        flat=batch_size > 0, log=log)
+        histories = _fleet_histories(res, res.wall)
+    elif engine == "legacy":
+        histories = {}
+        for name in schemes:
+            pc = pcm.make_power_control(name, dep,
+                                        prm.replace(eta=ETAS.get(name, 0.05)))
+            run_cfg = FLRunConfig(eta=ETAS.get(name, 0.05),
+                                  num_rounds=num_rounds,
+                                  eval_every=eval_every, gmax=PAPER.gmax,
+                                  seed=seed, batch_size=batch_size)
+            t0 = time.time()
+            _, hist = run_fl_legacy(mlp.mlp_loss, params0, pc, dep.gains,
+                                    data, run_cfg, evals, log=log)
+            histories[name] = hist
+            if log:
+                print(f"  {name}: {time.time() - t0:.1f}s")
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        with open(os.path.join(ARTIFACT_DIR, f"histories_seed{seed}.json"),
+                  "w") as f:
+            json.dump(histories, f, indent=1)
     return histories
 
 
@@ -108,3 +177,111 @@ def summarize(histories) -> list:
                     else ("none" if name == "ideal" else "statistical")),
         })
     return rows
+
+
+def _history_deltas(a: dict, b: dict) -> dict:
+    """Max |delta| between two scheme->history maps at each eval metric."""
+    out = {}
+    for metric in ("acc", "global_loss"):
+        out[metric] = max(
+            abs(ra[metric] - rb[metric])
+            for name in a for ra, rb in zip(a[name], b[name]))
+    return out
+
+
+def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
+              batch_size: int = BENCH_BATCH, log: bool = True) -> dict:
+    """Engine-vs-legacy wall clock for the full scheme grid; writes
+    experiments/fig2/engine_benchmark.json.
+
+    Three runs of the 7-scheme x num_rounds grid, all walls including
+    compile:
+      legacy          pre-engine host loop, full batch (the old fig2 path)
+      fleet_fullbatch one scan program, full batch — same arithmetic and
+                      streams as legacy, history deltas recorded
+      fleet_minibatch one scan program, on-device batch_size sampling +
+                      Pallas flattened aggregation — the per-PR sweep mode
+    """
+    cfg = dict(num_rounds=num_rounds, eval_every=eval_every, seed=seed,
+               save=False)
+    t0 = time.time()
+    legacy = run(engine="legacy", **cfg)
+    wall_legacy = time.time() - t0
+    if log:
+        print(f"legacy loop (full batch): {wall_legacy:.1f}s")
+
+    t0 = time.time()
+    fleet_full = run(engine="fleet", **cfg)
+    wall_full = time.time() - t0
+    if log:
+        print(f"scan fleet (full batch):  {wall_full:.1f}s")
+
+    t0 = time.time()
+    fleet_mb = run(engine="fleet", batch_size=batch_size, **cfg)
+    wall_mb = time.time() - t0
+    if log:
+        print(f"scan fleet (minibatch {batch_size}): {wall_mb:.1f}s")
+
+    deltas = _history_deltas(legacy, fleet_full)
+    report = {
+        "grid": {"schemes": SCHEMES, "num_rounds": num_rounds,
+                 "eval_every": eval_every, "seed": seed,
+                 "bench_batch_size": batch_size,
+                 "device": jax.devices()[0].device_kind,
+                 "backend": jax.default_backend()},
+        "wall_s": {"legacy_loop_fullbatch": round(wall_legacy, 2),
+                   "fleet_fullbatch": round(wall_full, 2),
+                   "fleet_minibatch": round(wall_mb, 2)},
+        "speedup": {
+            # headline: the engine's sweep mode vs the pre-engine fig2 path
+            "engine_vs_legacy": round(wall_legacy / wall_mb, 2),
+            "fullbatch_engine_vs_legacy": round(wall_legacy / wall_full, 2),
+        },
+        "equivalence": {
+            "note": "fleet_fullbatch vs legacy at identical seeds/streams",
+            "max_abs_delta": {k: float(v) for k, v in deltas.items()},
+        },
+        "final_acc": {
+            "legacy": {n: legacy[n][-1]["acc"] for n in legacy},
+            "fleet_fullbatch": {n: fleet_full[n][-1]["acc"]
+                                for n in fleet_full},
+            "fleet_minibatch": {n: fleet_mb[n][-1]["acc"] for n in fleet_mb},
+        },
+    }
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    with open(os.path.join(ARTIFACT_DIR, "engine_benchmark.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    if log:
+        print(json.dumps(report["speedup"], indent=1))
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", action="store_true",
+                    help="engine-vs-legacy wall-clock benchmark + JSON")
+    ap.add_argument("--legacy", action="store_true",
+                    help="run the pre-engine host loop instead of the fleet")
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--every", type=int, default=None,
+                    help="eval cadence (default: 10, or 15 under --bench)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch-size", type=int, default=0,
+                    help="0 = full batch (paper); under --bench, the "
+                         f"minibatch mode size (default {BENCH_BATCH})")
+    args = ap.parse_args(argv)
+    if args.bench:
+        benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
+                  seed=args.seed,
+                  batch_size=args.batch_size or BENCH_BATCH)
+        return
+    hist = run(num_rounds=args.rounds, eval_every=args.every or 10,
+               seed=args.seed,
+               engine="legacy" if args.legacy else "fleet",
+               batch_size=args.batch_size, log=True)
+    for row in summarize(hist):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
 """Benchmark harness (deliverable d): one entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fig2-rounds N] [--skip-fig2]
+    PYTHONPATH=src python -m benchmarks.run --smoke
 
 Emits ``name,us_per_call,derived`` CSV rows per the repo convention, plus a
 human-readable summary.  Roofline rows appear when experiments/dryrun/
 artifacts exist (produced by repro.launch.dryrun).
+
+``--smoke`` is the CI engine-regression gate: it drives the scan/vmap
+experiment engine end to end on CPU in a couple of minutes — the full
+7-scheme fig2 fleet for a handful of minibatch rounds plus a short
+scenario-sweep training fleet — and fails loudly if the compiled engine
+stops producing finite, learning trajectories.
 """
 from __future__ import annotations
 
@@ -20,13 +27,51 @@ def _csv(row: dict) -> str:
     return f"{name},{us},{derived}"
 
 
+def smoke(seed: int = 0) -> None:
+    """Minutes-scale engine smoke: compiled fig2 fleet + scenario fleet."""
+    import numpy as np
+
+    from benchmarks import fig2, scenario_sweep
+
+    print("bench,us_per_call,derived")
+    t0 = time.time()
+    hist = fig2.run(num_rounds=8, eval_every=4, seed=seed, batch_size=64,
+                    save=False)
+    assert set(hist) == set(fig2.SCHEMES), sorted(hist)
+    for name, rows in hist.items():
+        accs = [r["acc"] for r in rows]
+        assert np.all(np.isfinite(accs)), (name, accs)
+        assert rows[-1]["active"] >= 1.0, (name, rows[-1])
+        print(_csv({"bench": f"smoke_fig2_{name}",
+                    "final_acc": round(accs[-1], 4)}), flush=True)
+    print(f"# smoke fig2 fleet (7 schemes x 8 rounds): "
+          f"{time.time() - t0:.1f}s", flush=True)
+
+    t0 = time.time()
+    rows = scenario_sweep.train_sweep(
+        scenario_names=("disk_rayleigh", "disk_markov"), num_rounds=4,
+        eval_every=2, seed=seed, batch_size=64)
+    for r in rows:
+        assert np.isfinite(r["final_acc"]), r
+        print(_csv({"bench": f"smoke_{r['scenario']}_{r['scheme']}",
+                    "final_acc": r["final_acc"]}), flush=True)
+    print(f"# smoke scenario fleets: {time.time() - t0:.1f}s", flush=True)
+    print("# smoke OK", flush=True)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fig2-rounds", type=int, default=150)
     ap.add_argument("--fig2-every", type=int, default=15)
     ap.add_argument("--skip-fig2", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: short compiled-engine runs, asserts")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke(seed=args.seed)
+        return
 
     print("bench,us_per_call,derived")
 
@@ -58,7 +103,8 @@ def main(argv=None) -> None:
     for row in kernel_bench.run():
         print(_csv(row), flush=True)
 
-    # --- Fig. 2 reproduction (the paper's main experiment) ---
+    # --- Fig. 2 reproduction (the paper's main experiment): the whole
+    # scheme grid through one compiled scan program (fl.engine) ---
     if not args.skip_fig2:
         from benchmarks import fig2
         t0 = time.time()

@@ -14,9 +14,9 @@ the scenario's family-aware statistics:
     objective   2 eta L zeta + bias                      (the (P1) objective)
 
 and emits one CSV row per (scenario, scheme).  With ``--train`` it also runs
-the paper's MLP task through ``fl.server`` on each scenario's FadingProcess
-and appends test accuracy — on disk_rayleigh this training path is
-bit-identical to benchmarks/fig2.py.
+the paper's MLP task on each scenario's FadingProcess — the scheme axis as
+one compiled scan fleet per scenario (``fl.engine.run_fleet``) — and
+appends test accuracy.
 """
 from __future__ import annotations
 
@@ -75,13 +75,22 @@ def sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
 
 def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
                 num_rounds: int = 100, eval_every: int = 20,
-                seed: int = 0, log: bool = False) -> list:
-    """Short FL runs (paper MLP task) per (scenario, scheme)."""
+                seed: int = 0, log: bool = False,
+                batch_size: int = 0) -> list:
+    """Short FL runs (paper MLP task) per (scenario, scheme).
+
+    Per scenario, the whole scheme axis runs as ONE compiled scan fleet
+    (fl.engine.run_fleet) on the scenario's FadingProcess — the default
+    sca/lcpc/zero_bias grid is a homogeneous TruncatedInversion stack, so
+    a single vmapped program covers it; aggregation rides the flattened
+    Pallas hot path (DESIGN.md §Engine).
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.data import partition, synthetic
-    from repro.fl.server import FLRunConfig, run_fl
+    from repro.fl.engine import run_fleet
+    from repro.fl.server import FLRunConfig
     from repro.models import mlp
     from repro.models.param import init_params
 
@@ -103,16 +112,17 @@ def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
         prm = scn.make_ota_params(dep, d=mlp.PARAM_DIM, gmax=PAPER.gmax,
                                   eta=0.05, kappa_sq=4.0)
         fading = scn.make_fading_process(dep, sc.dynamics)
-        for scheme in schemes:
-            # global-CSI schemes pick up dropout-awareness from dep.p_dropout
-            pc = pcm.make_power_control(scheme, dep, prm)
-            run_cfg = FLRunConfig(eta=0.05, num_rounds=num_rounds,
-                                  eval_every=eval_every, gmax=PAPER.gmax,
-                                  seed=seed)
-            _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data,
-                             run_cfg, evals, log=log, fading=fading)
+        # global-CSI schemes pick up dropout-awareness from dep.p_dropout
+        pcs = [pcm.make_power_control(s, dep, prm) for s in schemes]
+        run_cfg = FLRunConfig(eta=0.05, num_rounds=num_rounds,
+                              eval_every=eval_every, gmax=PAPER.gmax,
+                              seed=seed, batch_size=batch_size)
+        res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
+                        run_cfg, evals, fading=fading, flat=True, log=log)
+        final = res.evals[-1][1]["acc"]
+        for i, scheme in enumerate(schemes):
             rows.append({"scenario": sc_name, "scheme": scheme,
-                         "final_acc": round(hist[-1]["acc"], 4),
+                         "final_acc": round(float(final[i, 0]), 4),
                          "rounds": num_rounds})
     return rows
 

@@ -3,7 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Trains the paper's MLP over a simulated heterogeneous wireless network with
-three OTA power-control schemes and prints the accuracy trajectory.
+three OTA power-control schemes — all three as ONE compiled scan program:
+the schemes are stacked into a vmapped fleet (core.power_control
+.stack_schemes) and the round loop runs as lax.scan on device
+(fl.engine.run_fleet, DESIGN.md §Engine).
 """
 import jax
 import jax.numpy as jnp
@@ -12,7 +15,8 @@ import numpy as np
 from repro.core import channel, power_control as pcm
 from repro.core.theory import OTAParams
 from repro.data import partition, synthetic
-from repro.fl.server import FLRunConfig, run_fl
+from repro.fl.engine import run_fleet
+from repro.fl.server import FLRunConfig
 from repro.models import mlp
 from repro.models.param import init_params
 
@@ -35,12 +39,18 @@ params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(0))
 xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
 evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
 
-# 4. run three schemes: noiseless reference, the paper's SCA design, and the
-#    zero-instantaneous-bias baseline constrained by the weakest channel
-for scheme_name in ["ideal", "sca", "vanilla"]:
-    scheme = pcm.make_power_control(scheme_name, dep, prm)
-    run_cfg = FLRunConfig(eta=0.05, num_rounds=60, eval_every=20)
-    _, hist = run_fl(mlp.mlp_loss, params0, scheme, dep.gains, (xd, yd),
-                     run_cfg, eval_fn=lambda p: evals(p))
-    traj = " -> ".join(f"{h['acc']:.3f}" for h in hist)
-    print(f"{scheme_name:8s} acc: {traj}")
+# 4. three schemes, one compiled program: noiseless reference, the paper's
+#    SCA design, and the zero-instantaneous-bias weakest-channel baseline.
+#    The heterogeneous mix dispatches through the SchemeBatch union; the
+#    aggregation rides the flattened Pallas kernel path.
+names = ["ideal", "sca", "vanilla"]
+schemes = [pcm.make_power_control(n, dep, prm) for n in names]
+run_cfg = FLRunConfig(eta=0.05, num_rounds=60, eval_every=20, batch_size=64)
+res = run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, (xd, yd),
+                run_cfg, evals, flat=True)
+for i, name in enumerate(names):
+    traj = " -> ".join(f"{float(ev['acc'][i, 0]):.3f}"
+                       for _, ev in res.evals)
+    print(f"{name:8s} acc: {traj}")
+print(f"one compiled fleet, wall {res.wall:.1f}s; per-round traces: "
+      f"{sorted(res.traces)} shape {res.traces['active_devices'].shape}")

@@ -36,6 +36,8 @@ for name in scn.SWEEP_FAMILIES:
           f"{2 * prm.eta * z['total'] + bias:10.3g}")
 
 # 2. train the paper's MLP on the baseline vs the clustered extreme
+#    (run_fl rides the scan-compiled engine: the round loop is lax.scan on
+#    device and per-round metric traces come back on hist.traces)
 x, y, xt, yt = synthetic.mnist_like(500, seed=0)
 shards = partition.partition_by_label(x, y, 10, seed=0)
 data = partition.stack_shards(shards)
@@ -54,4 +56,5 @@ for name in ["disk_rayleigh", "two_cluster"]:
     _, hist = run_fl(mlp.mlp_loss, params0, pc, dep.gains, data, run_cfg,
                      eval_fn=lambda p: evals(p), fading=fading)
     traj = " -> ".join(f"{h['acc']:.3f}" for h in hist)
-    print(f"sca on {name:16s} acc: {traj}")
+    grad0 = float(hist.traces["grad_norm_mean"][0])
+    print(f"sca on {name:16s} acc: {traj}  (round-0 grad norm {grad0:.2f})")

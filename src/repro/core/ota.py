@@ -69,24 +69,65 @@ def add_receiver_noise(tree: PyTree, noise_scale, key: jax.Array) -> PyTree:
 
 
 def weighted_sum(stacked: PyTree, s: jax.Array) -> PyTree:
-    """sum_m s_m * g_m over the leading client axis of every leaf."""
+    """sum_m s_m * g_m over the leading client axis of every leaf.
+
+    Accumulates in float32 and casts on write (matching the Pallas kernel's
+    semantics): casting ``s`` to a low-precision leaf dtype before the
+    reduction would throw away coefficient precision — the coefficients span
+    many orders of magnitude across a heterogeneous deployment while bf16
+    has an 8-bit mantissa.
+    """
     def one(leaf):
-        w = s.astype(leaf.dtype).reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return jnp.sum(w * leaf, axis=0)
+        w = s.astype(jnp.float32).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        acc = jnp.sum(w * leaf.astype(jnp.float32), axis=0)
+        return acc.astype(leaf.dtype)
     return jax.tree.map(one, stacked)
 
 
+def split_ota_key(key: jax.Array):
+    """The canonical (k_coeff, k_noise) split every aggregation path uses.
+
+    Exposed so callers that need the coefficients outside the aggregation
+    (round metrics, the engine's traces) can derive them from the *same*
+    key the aggregation consumes — computing them from a different split
+    would silently disagree with the applied coefficients for schemes whose
+    ``round_coeffs`` is randomized (bbfl_alternative).
+    """
+    return jax.random.split(key)
+
+
+def apply_round_coeffs(stacked_grads: PyTree, s: jax.Array, noise_scale,
+                       k_noise: jax.Array, flat: bool = False) -> PyTree:
+    """Aggregate with precomputed per-round coefficients.
+
+    flat=False: the per-leaf tree-map path (reference oracle).
+    flat=True:  ravel the pytree once and run one fused flattened
+                aggregation (kernels.ops.ota_aggregate_pytree — the Pallas
+                kernel on TPU, the flattened jnp oracle on CPU) with f32
+                accumulation and a single fused noise draw whose per-leaf
+                keying reproduces the tree path's realizations.  ~1e-7
+                relative fp difference from the oracle (fusion/FMA
+                ordering), tested in tests/test_engine.py.
+    """
+    if flat:
+        from repro.kernels import ops as kops
+        return kops.ota_aggregate_pytree(stacked_grads, s, noise_scale,
+                                         k_noise)
+    agg = weighted_sum(stacked_grads, s)
+    return add_receiver_noise(agg, noise_scale, k_noise)
+
+
 def ota_aggregate(stacked_grads: PyTree, scheme, h: jax.Array,
-                  key: jax.Array) -> PyTree:
+                  key: jax.Array, flat: bool = False) -> PyTree:
     """Full OTA round on stacked per-client grads [N, ...].
 
     h: complex fading [N] (the devices' local instantaneous CSI);
     scheme: a PowerControl; key: receiver-noise randomness.
     """
-    k_coeff, k_noise = jax.random.split(key)
+    k_coeff, k_noise = split_ota_key(key)
     s, noise_scale = scheme.round_coeffs(h, k_coeff)
-    agg = weighted_sum(stacked_grads, s)
-    return add_receiver_noise(agg, noise_scale, k_noise)
+    return apply_round_coeffs(stacked_grads, s, noise_scale, k_noise,
+                              flat=flat)
 
 
 # ---------------------------------------------------------------------------

@@ -53,7 +53,19 @@ from repro.core.theory import OTAParams
 
 @dataclasses.dataclass
 class PowerControl:
-    """Base: time-invariant design state + per-round coefficient map."""
+    """Base: time-invariant design state + per-round coefficient map.
+
+    Every concrete scheme is registered as a JAX pytree (see
+    ``_register_scheme_pytrees`` at the bottom of this module): its numeric
+    design state (gamma, alpha, thresholds, ...) are the array leaves and
+    its name/config flags are static aux data.  A scheme object can
+    therefore cross jit boundaries as an argument, and same-structure
+    schemes can be stacked along a leading [K] axis (``stack_schemes``) and
+    run as one vmapped fleet — the substrate of the batched experiment
+    engine (DESIGN.md §Engine).  ``round_coeffs`` is pure jnp on the leaf
+    fields, so it traces with either concrete numpy state or batched
+    tracers.
+    """
     name: str = "base"
     requires_global_csi: bool = False
     # Time-invariant design (populated where applicable):
@@ -76,18 +88,30 @@ def _bmax(prm: OTAParams) -> float:
 # zero-bias.  s_m = chi_m gamma_m / alpha,  noise = sqrt(N0)/alpha.
 # ---------------------------------------------------------------------------
 
+def _truncated_coeffs(habs, gamma, alpha, thresholds, noise_over_alpha):
+    """chi-truncated inversion coefficients (shared by the class and the
+    SchemeBatch union branch — one definition, bitwise-identical paths)."""
+    dt = habs.dtype
+    chi = (habs >= jnp.asarray(thresholds, dt)).astype(dt)
+    s = chi * jnp.asarray(gamma, dt) / jnp.asarray(alpha, dt)
+    return s, jnp.asarray(noise_over_alpha, dt)
+
+
 @dataclasses.dataclass
 class TruncatedInversion(PowerControl):
     thresholds: Optional[np.ndarray] = None   # [N] chi thresholds on |h|
     n0: float = 0.0
+    # sqrt(n0)/alpha, precomputed in float64 at build time so round_coeffs
+    # never does host math on (possibly traced) leaves.
+    noise_over_alpha: Optional[float] = None
+
+    def __post_init__(self):
+        if self.noise_over_alpha is None and self.alpha is not None:
+            self.noise_over_alpha = float(np.sqrt(self.n0) / self.alpha)
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
-        habs = jnp.abs(h)
-        chi = (habs >= jnp.asarray(self.thresholds)).astype(h.real.dtype)
-        s = chi * jnp.asarray(self.gamma) / self.alpha
-        noise_scale = jnp.asarray(np.sqrt(self.n0) / self.alpha,
-                                  dtype=h.real.dtype)
-        return s, noise_scale
+        return _truncated_coeffs(jnp.abs(h), self.gamma, self.alpha,
+                                 self.thresholds, self.noise_over_alpha)
 
 
 def _make_truncated(name: str, gamma: np.ndarray, prm: OTAParams) -> TruncatedInversion:
@@ -138,6 +162,24 @@ def make_zero_bias(deployment: Deployment, prm: OTAParams,
 # weakest instantaneous channel.  Needs global instantaneous CSI.
 # ---------------------------------------------------------------------------
 
+def _vanilla_coeffs(habs, n, bmax, n0, dropout_aware: bool):
+    dt = habs.dtype
+    if not dropout_aware:  # paper baseline: exact pre-scenario graph
+        c_t = bmax * jnp.min(habs)
+        s = jnp.full((n,), 1.0 / n, dtype=dt)
+        noise_scale = jnp.sqrt(n0) / (n * c_t)
+        return s, noise_scale.astype(dt)
+    # Dropped devices (h = 0) are excluded from the inversion: the scale
+    # binds on the weakest *active* channel and only active devices are
+    # averaged (uniform over the k participants).
+    active = (habs > 0).astype(dt)
+    k = jnp.maximum(jnp.sum(active), 1.0)
+    c_t = bmax * jnp.min(jnp.where(habs > 0, habs, jnp.inf))
+    s = active / k
+    noise_scale = jnp.sqrt(n0) / (k * c_t)
+    return s, noise_scale.astype(dt)
+
+
 @dataclasses.dataclass
 class VanillaOTA(PowerControl):
     bmax: float = 0.0
@@ -146,22 +188,8 @@ class VanillaOTA(PowerControl):
     dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
-        habs = jnp.abs(h)
-        n = self.num_devices
-        if not self.dropout_aware:  # paper baseline: exact pre-scenario graph
-            c_t = self.bmax * jnp.min(habs)
-            s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
-            noise_scale = jnp.sqrt(self.n0) / (n * c_t)
-            return s, noise_scale.astype(h.real.dtype)
-        # Dropped devices (h = 0) are excluded from the inversion: the scale
-        # binds on the weakest *active* channel and only active devices are
-        # averaged (uniform over the k participants).
-        active = (habs > 0).astype(h.real.dtype)
-        k = jnp.maximum(jnp.sum(active), 1.0)
-        c_t = self.bmax * jnp.min(jnp.where(habs > 0, habs, jnp.inf))
-        s = active / k
-        noise_scale = jnp.sqrt(self.n0) / (k * c_t)
-        return s, noise_scale.astype(h.real.dtype)
+        return _vanilla_coeffs(jnp.abs(h), self.num_devices, self.bmax,
+                               self.n0, self.dropout_aware)
 
 
 def _dropout_aware(deployment: Deployment, override) -> bool:
@@ -188,6 +216,46 @@ def make_vanilla(deployment: Deployment, prm: OTAParams,
 # at full power.  c is optimized on a fixed log grid (jit-friendly).
 # ---------------------------------------------------------------------------
 
+def _opc_coeffs(habs, n, bmax, n0, gmax, grid_size: int,
+                dropout_aware: bool):
+    dt = habs.dtype
+    base = bmax * habs * n                  # c at which device m leaves inversion
+    if dropout_aware:
+        # dropped devices have base = 0: b_m = min(c/(n*0), bmax) = bmax
+        # but s_m = b_m * 0 / c = 0, so they only matter for the grid
+        # bounds — anchor those on the active channels.  An all-dropped
+        # round would give (c_lo, c_hi) = (inf, 0) and a NaN grid, so it
+        # falls back to a dummy finite bracket; s is identically 0 there
+        # and the noise is zeroed below — a no-op round, like Vanilla.
+        any_active = jnp.any(base > 0)
+        c_lo = jnp.where(any_active,
+                         0.02 * jnp.min(jnp.where(base > 0, base,
+                                                  jnp.inf)), 1.0)
+        c_hi = jnp.where(any_active, 50.0 * jnp.max(base), 2.0)
+    else:
+        c_lo = 0.02 * jnp.min(base)
+        c_hi = 50.0 * jnp.max(base)
+    grid = jnp.exp(jnp.linspace(jnp.log(c_lo), jnp.log(c_hi), grid_size))
+
+    def mse(c):
+        b = jnp.minimum(c / (n * habs), bmax)
+        sig = jnp.sum((b * habs / c - 1.0 / n) ** 2) * gmax**2
+        return sig + n0 / c**2
+
+    vals = jax.vmap(mse)(grid)
+    c_star = grid[jnp.argmin(vals)]
+    # zoom refinement around the coarse optimum
+    for _ in range(2):
+        fine = c_star * jnp.exp(jnp.linspace(-0.15, 0.15, 33))
+        c_star = fine[jnp.argmin(jax.vmap(mse)(fine))]
+    b = jnp.minimum(c_star / (n * habs), bmax)
+    s = (b * habs / c_star).astype(dt)
+    noise_scale = (jnp.sqrt(n0) / c_star).astype(dt)
+    if dropout_aware:
+        noise_scale = jnp.where(any_active, noise_scale, 0.0)
+    return s, noise_scale
+
+
 @dataclasses.dataclass
 class OPC(PowerControl):
     bmax: float = 0.0
@@ -198,44 +266,8 @@ class OPC(PowerControl):
     dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
-        habs = jnp.abs(h)
-        n = self.num_devices
-        base = self.bmax * habs * n                  # c at which device m leaves inversion
-        if self.dropout_aware:
-            # dropped devices have base = 0: b_m = min(c/(n*0), bmax) = bmax
-            # but s_m = b_m * 0 / c = 0, so they only matter for the grid
-            # bounds — anchor those on the active channels.  An all-dropped
-            # round would give (c_lo, c_hi) = (inf, 0) and a NaN grid, so it
-            # falls back to a dummy finite bracket; s is identically 0 there
-            # and the noise is zeroed below — a no-op round, like Vanilla.
-            any_active = jnp.any(base > 0)
-            c_lo = jnp.where(any_active,
-                             0.02 * jnp.min(jnp.where(base > 0, base,
-                                                      jnp.inf)), 1.0)
-            c_hi = jnp.where(any_active, 50.0 * jnp.max(base), 2.0)
-        else:
-            c_lo = 0.02 * jnp.min(base)
-            c_hi = 50.0 * jnp.max(base)
-        grid = jnp.exp(jnp.linspace(jnp.log(c_lo), jnp.log(c_hi),
-                                    self.grid_size))
-
-        def mse(c):
-            b = jnp.minimum(c / (n * habs), self.bmax)
-            sig = jnp.sum((b * habs / c - 1.0 / n) ** 2) * self.gmax**2
-            return sig + self.n0 / c**2
-
-        vals = jax.vmap(mse)(grid)
-        c_star = grid[jnp.argmin(vals)]
-        # zoom refinement around the coarse optimum
-        for _ in range(2):
-            fine = c_star * jnp.exp(jnp.linspace(-0.15, 0.15, 33))
-            c_star = fine[jnp.argmin(jax.vmap(mse)(fine))]
-        b = jnp.minimum(c_star / (n * habs), self.bmax)
-        s = (b * habs / c_star).astype(h.real.dtype)
-        noise_scale = (jnp.sqrt(self.n0) / c_star).astype(h.real.dtype)
-        if self.dropout_aware:
-            noise_scale = jnp.where(any_active, noise_scale, 0.0)
-        return s, noise_scale
+        return _opc_coeffs(jnp.abs(h), self.num_devices, self.bmax, self.n0,
+                           self.gmax, self.grid_size, self.dropout_aware)
 
 
 def make_opc(deployment: Deployment, prm: OTAParams,
@@ -250,6 +282,38 @@ def make_opc(deployment: Deployment, prm: OTAParams,
 # BB-FL [11]: interior scheduling within R_in (and the alternating variant).
 # ---------------------------------------------------------------------------
 
+def _bbfl_mask_coeffs(habs, mask, bmax, n0, dropout_aware: bool):
+    if dropout_aware:
+        # scheduled devices that dropped out (h = 0) cannot transmit
+        mask = mask * (habs > 0).astype(habs.dtype)
+    # make_bbfl guarantees >= 1 scheduled device, so the max() guard only
+    # binds in the dropout case (all scheduled devices out this round)
+    k = jnp.maximum(jnp.sum(mask), 1.0)
+    c_t = bmax * jnp.min(jnp.where(mask > 0, habs, jnp.inf))
+    s = mask / k
+    noise_scale = jnp.sqrt(n0) / (k * c_t)
+    return s.astype(habs.dtype), noise_scale.astype(habs.dtype)
+
+
+def _bbfl_coeffs(habs, key, mask, alternative, bmax, n0,
+                 dropout_aware: bool):
+    """``alternative`` may be a python bool (class path, branch folded at
+    trace time) or a traced scalar (SchemeBatch union path, folded into the
+    select so interior/alternative rows share one graph)."""
+    interior = jnp.asarray(mask, dtype=habs.dtype)
+    if isinstance(alternative, bool) and not alternative:
+        return _bbfl_mask_coeffs(habs, interior, bmax, n0, dropout_aware)
+    full = jnp.ones_like(interior)
+    use_full = jax.random.bernoulli(key, 0.5)
+    if not isinstance(alternative, bool):
+        use_full = jnp.logical_and(use_full, alternative > 0)
+    s_i, ns_i = _bbfl_mask_coeffs(habs, interior, bmax, n0, dropout_aware)
+    s_f, ns_f = _bbfl_mask_coeffs(habs, full, bmax, n0, dropout_aware)
+    s = jnp.where(use_full, s_f, s_i)
+    ns = jnp.where(use_full, ns_f, ns_i)
+    return s, ns
+
+
 @dataclasses.dataclass
 class BBFL(PowerControl):
     mask: Optional[np.ndarray] = None    # [N] 1 if within R_in
@@ -259,30 +323,9 @@ class BBFL(PowerControl):
     num_devices: int = 0
     dropout_aware: bool = False   # scenarios with p_dropout > 0 observe h=0
 
-    def _coeffs_for_mask(self, habs, mask):
-        if self.dropout_aware:
-            # scheduled devices that dropped out (h = 0) cannot transmit
-            mask = mask * (habs > 0).astype(habs.dtype)
-        # make_bbfl guarantees >= 1 scheduled device, so the max() guard only
-        # binds in the dropout case (all scheduled devices out this round)
-        k = jnp.maximum(jnp.sum(mask), 1.0)
-        c_t = self.bmax * jnp.min(jnp.where(mask > 0, habs, jnp.inf))
-        s = mask / k
-        noise_scale = jnp.sqrt(self.n0) / (k * c_t)
-        return s.astype(habs.dtype), noise_scale.astype(habs.dtype)
-
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
-        habs = jnp.abs(h)
-        interior = jnp.asarray(self.mask, dtype=habs.dtype)
-        if not self.alternative:
-            return self._coeffs_for_mask(habs, interior)
-        full = jnp.ones_like(interior)
-        use_full = jax.random.bernoulli(key, 0.5)
-        s_i, ns_i = self._coeffs_for_mask(habs, interior)
-        s_f, ns_f = self._coeffs_for_mask(habs, full)
-        s = jnp.where(use_full, s_f, s_i)
-        ns = jnp.where(use_full, ns_f, ns_i)
-        return s, ns
+        return _bbfl_coeffs(jnp.abs(h), key, self.mask, self.alternative,
+                            self.bmax, self.n0, self.dropout_aware)
 
 
 def make_bbfl(deployment: Deployment, prm: OTAParams, alternative: bool,
@@ -307,14 +350,17 @@ def make_bbfl(deployment: Deployment, prm: OTAParams, alternative: bool,
 # Ideal FedAvg: noiseless uniform aggregation (eq. (2)).
 # ---------------------------------------------------------------------------
 
+def _ideal_coeffs(habs, n):
+    s = jnp.full((n,), 1.0 / n, dtype=habs.dtype)
+    return s, jnp.zeros((), dtype=habs.dtype)
+
+
 @dataclasses.dataclass
 class Ideal(PowerControl):
     num_devices: int = 0
 
     def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
-        n = self.num_devices
-        s = jnp.full((n,), 1.0 / n, dtype=h.real.dtype)
-        return s, jnp.zeros((), dtype=h.real.dtype)
+        return _ideal_coeffs(jnp.abs(h), self.num_devices)
 
 
 def make_ideal(deployment: Deployment, prm: OTAParams) -> Ideal:
@@ -348,3 +394,221 @@ def make_power_control(name: str, deployment: Deployment, prm: OTAParams,
         return make_zero_bias(deployment, prm, **kw)
     raise ValueError(f"unknown power-control scheme: {name!r}; "
                      f"available: {SCHEMES}")
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration + scheme stacking (DESIGN.md §Engine).
+#
+# Every concrete scheme is a pytree: numeric design state = leaves, name and
+# config flags = static aux.  ``stack_schemes`` turns a list of schemes into
+# one object whose leaves carry a leading [K] axis, so a single vmapped
+# program evaluates all K schemes' round coefficients — the [K-scheme x
+# S-seed] fleet of fl.engine rides on this.
+# ---------------------------------------------------------------------------
+
+# leaf (array) fields per class; every other dataclass field is static aux.
+_SCHEME_LEAVES = {
+    TruncatedInversion: ("gamma", "alpha", "p", "thresholds", "n0",
+                         "noise_over_alpha"),
+    VanillaOTA: ("gamma", "alpha", "p", "bmax", "n0"),
+    OPC: ("gamma", "alpha", "p", "bmax", "n0", "gmax"),
+    BBFL: ("gamma", "alpha", "p", "mask", "bmax", "n0"),
+    Ideal: ("gamma", "alpha", "p"),
+}
+
+
+def _scheme_statics(cls):
+    leaves = _SCHEME_LEAVES[cls]
+    return tuple(f.name for f in dataclasses.fields(cls)
+                 if f.name not in leaves)
+
+
+def _register_scheme_pytree(cls):
+    leaf_fields = _SCHEME_LEAVES[cls]
+    static_fields = _scheme_statics(cls)
+
+    def flatten(obj):
+        children = tuple(getattr(obj, f) for f in leaf_fields)
+        aux = tuple(getattr(obj, f) for f in static_fields)
+        return children, aux
+
+    def unflatten(aux, children):
+        kw = dict(zip(static_fields, aux))
+        kw.update(zip(leaf_fields, children))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+for _cls in _SCHEME_LEAVES:
+    _register_scheme_pytree(_cls)
+
+
+_UNION_KIND_OF = {TruncatedInversion: 0, VanillaOTA: 1, OPC: 2, BBFL: 3,
+                  Ideal: 4}
+
+
+@dataclasses.dataclass
+class SchemeBatch:
+    """Union representation of K *heterogeneous* schemes, stacked [K].
+
+    Each row carries the superset of all kinds' design state (unused fields
+    hold benign fillers) plus a ``kind`` index; ``round_coeffs`` on one row
+    dispatches through ``lax.switch``, which under vmap becomes a select
+    over all kind branches — one compiled program runs an arbitrary mix of
+    truncated-inversion / vanilla / OPC / BB-FL / ideal rows.  The branch
+    bodies are the *same* module-level coefficient functions the scheme
+    classes call, so a SchemeBatch row reproduces the standalone scheme
+    run-for-run.
+    """
+    names: tuple = ()
+    num_devices: int = 0
+    grid_size: int = 128
+    dropout_aware: bool = False
+    kind: Optional[np.ndarray] = None            # [K] int32
+    gamma: Optional[np.ndarray] = None           # [K, N]
+    alpha: Optional[np.ndarray] = None           # [K]
+    p: Optional[np.ndarray] = None               # [K, N]
+    thresholds: Optional[np.ndarray] = None      # [K, N]
+    noise_over_alpha: Optional[np.ndarray] = None  # [K]
+    mask: Optional[np.ndarray] = None            # [K, N]
+    alternative: Optional[np.ndarray] = None     # [K] (0/1)
+    bmax: Optional[np.ndarray] = None            # [K]
+    n0: Optional[np.ndarray] = None              # [K]
+    gmax: Optional[np.ndarray] = None            # [K]
+
+    def __len__(self):
+        return len(self.names)
+
+    @property
+    def name(self):
+        return "+".join(self.names)
+
+    def round_coeffs(self, h: jnp.ndarray, key: jax.Array):
+        """Per-row coefficients (use under vmap; rows are scalar/[N])."""
+        habs = jnp.abs(h)
+        n = self.num_devices
+        branches = (
+            lambda op: _truncated_coeffs(op[0], self.gamma, self.alpha,
+                                         self.thresholds,
+                                         self.noise_over_alpha),
+            lambda op: _vanilla_coeffs(op[0], n, self.bmax, self.n0,
+                                       self.dropout_aware),
+            lambda op: _opc_coeffs(op[0], n, self.bmax, self.n0, self.gmax,
+                                   self.grid_size, self.dropout_aware),
+            lambda op: _bbfl_coeffs(op[0], op[1], self.mask,
+                                    self.alternative, self.bmax, self.n0,
+                                    self.dropout_aware),
+            lambda op: _ideal_coeffs(op[0], n),
+        )
+        return jax.lax.switch(self.kind, branches, (habs, key))
+
+
+jax.tree_util.register_pytree_node(
+    SchemeBatch,
+    lambda sb: (tuple(getattr(sb, f) for f in
+                      ("kind", "gamma", "alpha", "p", "thresholds",
+                       "noise_over_alpha", "mask", "alternative", "bmax",
+                       "n0", "gmax")),
+                (sb.names, sb.num_devices, sb.grid_size, sb.dropout_aware)),
+    lambda aux, ch: SchemeBatch(*aux, *ch),
+)
+
+
+def _union_row(pc: PowerControl, n: int) -> dict:
+    """One SchemeBatch row from a concrete scheme (fillers keep every dead
+    branch finite so the vmapped select never sees NaN/Inf)."""
+    def arr(v, default):
+        return np.asarray(default if v is None else v, np.float64)
+    return dict(
+        kind=np.int32(_UNION_KIND_OF[type(pc)]),
+        gamma=arr(pc.gamma, np.zeros(n)),
+        alpha=arr(pc.alpha, 1.0),
+        p=arr(pc.p, np.full(n, 1.0 / n)),
+        thresholds=arr(getattr(pc, "thresholds", None), np.zeros(n)),
+        noise_over_alpha=arr(getattr(pc, "noise_over_alpha", None), 0.0),
+        mask=arr(getattr(pc, "mask", None), np.ones(n)),
+        alternative=arr(float(getattr(pc, "alternative", False)), 0.0),
+        bmax=arr(getattr(pc, "bmax", None), 1.0),
+        n0=arr(getattr(pc, "n0", None), 0.0),
+        gmax=arr(getattr(pc, "gmax", None), 1.0),
+    )
+
+
+def _scheme_n(pc: PowerControl) -> int:
+    for f in ("p", "gamma", "mask", "thresholds"):
+        v = getattr(pc, f, None)
+        if v is not None:
+            return int(np.asarray(v).shape[-1])
+    n = getattr(pc, "num_devices", 0)
+    if n:
+        return int(n)
+    raise ValueError(f"cannot infer device count for scheme {pc.name!r}")
+
+
+def stack_schemes(schemes):
+    """Stack K PowerControl schemes for a vmapped fleet (DESIGN.md §Engine).
+
+    Same-class schemes with identical static config (name aside) stack
+    directly: the result is one instance of that class whose array leaves
+    have a leading [K] axis, ready for ``jax.vmap`` with in_axes=0 on the
+    scheme argument.  Any mix of classes (or of static configs) falls back
+    to the ``SchemeBatch`` union with per-row lax.switch dispatch.  Either
+    way the result duck-types ``round_coeffs`` per row and exposes
+    ``.names``.
+    """
+    schemes = list(schemes)
+    if not schemes:
+        raise ValueError("stack_schemes needs at least one scheme")
+    names = tuple(pc.name for pc in schemes)
+    n = _scheme_n(schemes[0])
+    if any(_scheme_n(pc) != n for pc in schemes):
+        raise ValueError("schemes disagree on device count")
+
+    cls = type(schemes[0])
+    homogeneous = (cls in _SCHEME_LEAVES
+                   and all(type(pc) is cls for pc in schemes))
+    if homogeneous:
+        statics = [f for f in _scheme_statics(cls) if f != "name"]
+        s0 = {f: getattr(schemes[0], f) for f in statics}
+        homogeneous = all(
+            all(getattr(pc, f) == s0[f] for f in statics)
+            for pc in schemes[1:])
+    if homogeneous:
+        kw = dict(s0, name="+".join(names))
+        for f in _SCHEME_LEAVES[cls]:
+            vals = [getattr(pc, f) for pc in schemes]
+            if all(v is None for v in vals):
+                kw[f] = None
+            elif any(v is None for v in vals):
+                raise ValueError(f"inconsistent leaf {f!r} across schemes")
+            else:
+                kw[f] = np.stack([np.asarray(v, np.float64) for v in vals])
+        stacked = cls(**kw)
+        stacked.names = names
+        return stacked
+
+    # only schemes that have the flag vote: truncated-inversion/ideal rows
+    # are dropout-agnostic (h=0 -> chi=0 / uniform average regardless)
+    dropout = {bool(pc.dropout_aware) for pc in schemes
+               if hasattr(pc, "dropout_aware")} or {False}
+    if len(dropout) > 1:
+        raise ValueError("cannot stack schemes with mixed dropout_aware")
+    grid = {int(getattr(pc, "grid_size", 128)) for pc in schemes}
+    if len(grid) > 1:
+        raise ValueError("cannot stack OPC schemes with mixed grid_size")
+    rows = [_union_row(pc, n) for pc in schemes]
+    stacked = {f: np.stack([r[f] for r in rows]) for f in rows[0]}
+    return SchemeBatch(names=names, num_devices=n, grid_size=grid.pop(),
+                       dropout_aware=dropout.pop(), **stacked)
+
+
+def round_coeffs_fleet(stacked, h: jnp.ndarray, keys: jax.Array):
+    """Vmapped coefficients for a stacked fleet.
+
+    h: [N] (shared channel draw) or [K, N] per-scheme; keys: [K, 2].
+    Returns (s [K, N], noise_scale [K]).
+    """
+    in_h = 0 if jnp.ndim(h) == 2 else None
+    return jax.vmap(lambda pc, hh, kk: pc.round_coeffs(hh, kk),
+                    in_axes=(0, in_h, 0))(stacked, h, keys)

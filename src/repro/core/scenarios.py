@@ -253,6 +253,26 @@ class FadingProcess:
         """Stationary scattered-component draw (state for Markov dynamics)."""
         return ota.draw_fading(key, self._diffuse_gains())
 
+    def init_batch(self, keys: jax.Array) -> jax.Array:
+        """Batched ``init`` for the vmapped experiment engine: ``keys`` has
+        arbitrary leading axes [..., 2] and the returned state carries the
+        matching leading batch axes [..., N].  Each batch cell consumes its
+        key exactly like a standalone ``init`` call, so a fleet cell's
+        fading stream is identical to the corresponding single run's."""
+        flat = keys.reshape((-1,) + keys.shape[-1:])
+        states = jax.vmap(self.init)(flat)
+        return states.reshape(keys.shape[:-1] + states.shape[1:])
+
+    def step_batch(self, state: jax.Array, keys: jax.Array):
+        """Batched ``step`` over matching leading axes of state [..., N]
+        and keys [..., 2] (i.e. the engine's [K, S] grid)."""
+        batch = state.shape[:-1]
+        flat_s = state.reshape((-1,) + state.shape[-1:])
+        flat_k = keys.reshape((-1,) + keys.shape[-1:])
+        flat_s, h = jax.vmap(self.step)(flat_s, flat_k)
+        return (flat_s.reshape(state.shape),
+                h.reshape(batch + h.shape[-1:]))
+
     def step(self, state: jax.Array, key: jax.Array):
         if self.rho == 0.0 and self.p_dropout == 0.0:
             return state, self._draw_iid(key)

@@ -1,1 +1,10 @@
-"""repro.fl"""
+"""repro.fl — the paper-scale FL runtimes.
+
+``server``: single-run API (run_fl on the scan engine; run_fl_legacy host
+loop preserved as oracle/baseline).  ``engine``: the scan/vmap-compiled
+experiment engine — run_rounds for one (scheme, seed), run_fleet for a
+[K-scheme x S-seed] grid in one compiled program (DESIGN.md §Engine).
+"""
+from repro.fl.engine import FLResult, run_fleet, run_rounds  # noqa: F401
+from repro.fl.server import (FLRunConfig, History, make_round_fn,  # noqa: F401
+                             run_fl, run_fl_legacy)

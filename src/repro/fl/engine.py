@@ -1,0 +1,316 @@
+"""Scan-compiled batched FL experiment engine (DESIGN.md §Engine).
+
+The paper's experiments are sweeps — schemes x seeds x scenarios — but a
+host Python loop over rounds pays per-round dispatch, host->device batch
+copies, and one compilation per scheme, and can never batch the grid.  This
+module folds the FL round loop into XLA:
+
+* ``make_round_body`` — one round as a pure function (gradients, fading,
+  OTA aggregation, PS update), shared by every runtime below and by the
+  legacy ``fl.server.make_round_fn`` wrapper.  Minibatches are sampled
+  *on device* from the round key's ``k_batch`` lane.
+* ``run_rounds`` — single (scheme, seed) run with the round loop compiled
+  as chunked ``lax.scan`` (chunk boundaries = the eval cadence, so at most
+  three chunk lengths ever compile).  Bit-identical to the legacy Python
+  loop on the default path: the key stream, fading draws and update math
+  are the same ops in the same order.
+* ``run_fleet`` — a [K-scheme x S-seed] grid in ONE compiled program:
+  schemes are stacked into a pytree (``power_control.stack_schemes``) and
+  the scanned round body is vmapped over (scheme, seed) cells.  Each cell
+  reproduces the corresponding single run run-for-run.
+
+Per-round metric traces (grad-norm mean, active devices, noise scale) come
+back as stacked arrays straight from the scan — no per-round host sync.
+
+Aggregation inside the round body is switchable: ``flat=False`` uses the
+per-leaf tree-map oracle (bitwise-stable reference), ``flat=True`` ravels
+the gradient pytree once and runs one fused flattened aggregation
+(``kernels.ops.ota_aggregate_pytree`` — the Pallas ``ota_aggregate``
+kernel on TPU, the flattened jnp oracle on CPU) with f32 accumulation and
+a single fused noise draw whose per-leaf keying reproduces the tree path's
+realizations, so the two paths agree to float rounding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota
+from repro.core.power_control import PowerControl, stack_schemes
+from repro.optim.optimizers import clip_by_global_norm
+
+PyTree = Any
+
+# key folded into the run seed for FadingProcess state init (must match
+# fl.server.run_fl_legacy so engine and legacy runs share state streams)
+FADING_INIT_SALT = 0x5CE7A810
+
+
+@dataclasses.dataclass
+class FLResult:
+    """What a compiled run returns.
+
+    params        final parameters; leading [K, S] axes for fleet runs
+    traces        per-round metric traces as arrays: {name: [T]} for single
+                  runs, {name: [K, S, T]} for fleets
+    evals         [(round, {name: scalar-or-[K, S] array})] at the eval
+                  cadence (empty when no eval_fn was given)
+    names         scheme names, length K (single runs: (scheme.name,))
+    seeds         seeds swept, length S
+    wall          wall-clock seconds, compile included
+    fading_state  final FadingProcess state (None on the i.i.d. path)
+    """
+    params: PyTree
+    traces: dict
+    evals: list
+    names: tuple
+    seeds: tuple
+    wall: float
+    fading_state: Any = None
+
+
+def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
+                    fading=None, flat: bool = False,
+                    sample_on_device: bool = True) -> Callable:
+    """One FL round as a pure function.
+
+        body(scheme, eta, params, fading_state, key, data)
+            -> (params, fading_state, metrics)
+
+    ``scheme`` is a PowerControl pytree (so it may be a vmapped row of a
+    stacked fleet), ``eta`` a scalar step size (vmappable per scheme),
+    ``data`` the stacked per-device datasets (x [N, D, ...], y [N, D]).
+
+    The round key is split exactly like the legacy loop —
+    (k_fade, k_ota, k_batch) — with k_batch now actually consumed: when
+    ``sample_on_device`` and 0 < run.batch_size < D, each device's
+    minibatch is gathered on device (uniform with replacement, the same
+    sampling law as the legacy host-numpy path).  The default full-batch
+    path consumes keys and data identically to the legacy round function,
+    so trajectories are bit-for-bit reproducible against it.
+    """
+    gains_j = jnp.asarray(gains)
+
+    def device_grad(params, batch):
+        g = jax.grad(loss_fn)(params, batch)
+        if run.clip_to_gmax:
+            g, norm = clip_by_global_norm(g, run.gmax)
+        else:
+            norm = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                                for l in jax.tree.leaves(g)))
+        return g, norm
+
+    def sample(data, k_batch):
+        x_dev, y_dev = data
+        d = x_dev.shape[1]
+        if not sample_on_device or run.batch_size <= 0 \
+                or run.batch_size >= d:
+            return data
+        idx = jax.random.randint(k_batch, (x_dev.shape[0], run.batch_size),
+                                 0, d)
+        xb = jnp.take_along_axis(
+            x_dev, idx.reshape(idx.shape + (1,) * (x_dev.ndim - 2)), axis=1)
+        yb = jnp.take_along_axis(y_dev, idx, axis=1)
+        return xb, yb
+
+    def body(scheme, eta, params, fading_state, key, data):
+        k_fade, k_ota, k_batch = jax.random.split(key, 3)
+        batch = sample(data, k_batch)
+        grads, norms = jax.vmap(lambda b: device_grad(params, b))(batch)
+        if fading is None:
+            h = ota.draw_fading(k_fade, gains_j)
+        else:
+            fading_state, h = fading.step(fading_state, k_fade)
+        # coefficients once, threaded into both the aggregation and the
+        # metrics — they can never disagree (bbfl_alternative randomizes
+        # round_coeffs, so recomputing from a different key split would).
+        k_coeff, k_noise = ota.split_ota_key(k_ota)
+        s, noise_scale = scheme.round_coeffs(h, k_coeff)
+        g_hat = ota.apply_round_coeffs(grads, s, noise_scale, k_noise,
+                                       flat=flat)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, g_hat)
+        metrics = {
+            "grad_norm_mean": jnp.mean(norms),
+            "active_devices": jnp.sum((s > 0).astype(jnp.float32)),
+            "noise_scale": jnp.asarray(noise_scale, jnp.float32),
+        }
+        return params, fading_state, metrics
+
+    return body
+
+
+def chunk_lengths(num_rounds: int, eval_every: int,
+                  with_eval: bool) -> list:
+    """Scan chunk lengths whose boundaries hit the legacy eval cadence
+    (t % eval_every == 0 or t == num_rounds - 1).  At most three distinct
+    lengths occur — {1, eval_every, tail} — so at most three scan programs
+    ever compile per engine."""
+    if num_rounds <= 0:
+        return []
+    if not with_eval:
+        return [num_rounds]
+    pts = sorted(set(range(0, num_rounds, eval_every)) | {num_rounds - 1})
+    lengths, prev = [], -1
+    for t in pts:
+        lengths.append(t - prev)
+        prev = t
+    return lengths
+
+
+def _scan_chunk(round_body, scheme, eta, params, fading_state, key, data,
+                length: int):
+    """``length`` rounds of ``round_body`` under lax.scan; returns stacked
+    per-round metrics.  The main key is split once per round, exactly like
+    the legacy host loop."""
+    def step(carry, _):
+        params, fading_state, key = carry
+        key, sub = jax.random.split(key)
+        params, fading_state, metrics = round_body(scheme, eta, params,
+                                                   fading_state, sub, data)
+        return (params, fading_state, key), metrics
+
+    (params, fading_state, key), metrics = jax.lax.scan(
+        step, (params, fading_state, key), None, length=length)
+    return params, fading_state, key, metrics
+
+
+def _concat_traces(chunks: list) -> dict:
+    if not chunks:
+        return {}
+    return {k: np.concatenate([np.asarray(c[k]) for c in chunks], axis=-1)
+            for k in chunks[0]}
+
+
+def run_rounds(loss_fn: Callable, params: PyTree, scheme: PowerControl,
+               gains: np.ndarray, data: tuple, run,
+               eval_fn: Optional[Callable] = None, fading=None,
+               flat: bool = False, log: bool = False) -> FLResult:
+    """Single (scheme, seed) run with the round loop compiled as chunked
+    lax.scan.  Bit-identical to ``fl.server.run_fl_legacy`` on the default
+    full-batch path; with 0 < run.batch_size < D minibatches are sampled on
+    device from the round key (the legacy host-numpy sampling stream is
+    retired with the host loop)."""
+    t0 = time.time()
+    round_body = make_round_body(loss_fn, gains, run, fading=fading,
+                                 flat=flat)
+    # scheme and eta are *closed over*, not passed as operands: the legacy
+    # per-round jit embeds them as constants, and constant-vs-operand flips
+    # XLA constant folding enough to break bitwise equality with it.
+    chunk = jax.jit(
+        functools.partial(_scan_chunk, round_body, scheme, run.eta),
+        static_argnames=("length",))
+    data = tuple(jnp.asarray(a) for a in data)
+    key = jax.random.PRNGKey(run.seed)
+    fading_state = None
+    if fading is not None:
+        fading_state = fading.init(jax.random.fold_in(key, FADING_INIT_SALT))
+
+    evals, metric_chunks, t = [], [], 0
+    for length in chunk_lengths(run.num_rounds, run.eval_every,
+                                eval_fn is not None):
+        params, fading_state, key, metrics = chunk(
+            params, fading_state, key, data, length=length)
+        metric_chunks.append(metrics)
+        t += length
+        if eval_fn is not None:
+            ev = {k: float(v) for k, v in eval_fn(params).items()}
+            evals.append((t - 1, ev))
+            if log:
+                print({"round": t - 1, "scheme": scheme.name,
+                       **{k: round(v, 4) for k, v in ev.items()}})
+    return FLResult(params=params, traces=_concat_traces(metric_chunks),
+                    evals=evals, names=(scheme.name,), seeds=(run.seed,),
+                    wall=time.time() - t0, fading_state=fading_state)
+
+
+def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
+              data: tuple, run, eval_fn: Optional[Callable] = None, *,
+              etas=None, seeds: Optional[Sequence[int]] = None, fading=None,
+              flat: bool = True, log: bool = False) -> FLResult:
+    """A [K-scheme x S-seed] experiment grid as ONE compiled scan program.
+
+    ``schemes``: a list of PowerControl objects (stacked here via
+    ``stack_schemes`` — heterogeneous mixes dispatch through the
+    SchemeBatch union) or an already-stacked fleet.  ``etas``: per-scheme
+    step sizes [K] (default run.eta everywhere).  ``seeds``: the seed axis
+    (default (run.seed,)); each (k, s) cell consumes the exact key/fading
+    streams of a standalone run with that seed, so the fleet matches the
+    per-scheme loop run-for-run.
+
+    Every cell shares ``data`` (device-resident once) and the initial
+    ``params``.  eval_fn is vmapped across the grid at each eval boundary;
+    traces/evals come back with leading [K, S] axes (see FLResult).
+    """
+    t0 = time.time()
+    stacked = schemes if not isinstance(schemes, (list, tuple)) \
+        else stack_schemes(schemes)
+    names = tuple(getattr(stacked, "names", (stacked.name,)))
+    k = len(names)
+    seeds = tuple(int(s) for s in (seeds if seeds is not None
+                                   else (run.seed,)))
+    s_axis = len(seeds)
+    if etas is None:
+        etas = np.full(k, run.eta, np.float64)
+    etas = np.asarray(etas, np.float64)
+    if etas.shape != (k,):
+        raise ValueError(f"etas shape {etas.shape} != ({k},)")
+
+    round_body = make_round_body(loss_fn, gains, run, fading=fading,
+                                 flat=flat)
+
+    def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                    length):
+        def cell(scheme, eta, params, fstate, key):
+            return _scan_chunk(round_body, scheme, eta, params, fstate,
+                               key, data, length)
+        per_seed = jax.vmap(cell, in_axes=(None, None, 0, 0, 0))
+        per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
+        return per_cell(stacked, etas, params_b, fstate_b, keys_b)
+
+    chunk = jax.jit(fleet_chunk, static_argnames=("length",))
+
+    data = tuple(jnp.asarray(a) for a in data)
+    params_b = jax.tree.map(
+        lambda a: jnp.tile(jnp.asarray(a)[None, None],
+                           (k, s_axis) + (1,) * jnp.ndim(a)), params)
+    keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds])      # [S, 2]
+    keys_b = jnp.tile(keys0[None], (k, 1, 1))                      # [K, S, 2]
+    fading_state = None
+    if fading is not None:
+        init_keys = jax.vmap(
+            lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
+        state_s = fading.init_batch(init_keys)                     # [S, N]
+        fading_state = jnp.tile(state_s[None], (k,) + (1,) * state_s.ndim)
+
+    eval_b = None
+    if eval_fn is not None:
+        eval_b = jax.jit(jax.vmap(jax.vmap(eval_fn)))
+
+    evals, metric_chunks, t = [], [], 0
+    for length in chunk_lengths(run.num_rounds, run.eval_every,
+                                eval_fn is not None):
+        params_b, fading_state, keys_b, metrics = chunk(
+            stacked, etas, params_b, fading_state, keys_b, data,
+            length=length)
+        metric_chunks.append(metrics)
+        t += length
+        if eval_b is not None:
+            ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
+            evals.append((t - 1, ev))
+            if log:
+                lead = next(iter(ev))
+                print({"round": t - 1,
+                       **{n: round(float(ev[lead][i, 0]), 4)
+                          for i, n in enumerate(names)}})
+    return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
+                    evals=evals, names=names, seeds=seeds,
+                    wall=time.time() - t0, fading_state=fading_state)

@@ -1,5 +1,13 @@
 """FL orchestration: the paper's training loop (broadcast -> local SGD grad
--> OTA upload -> PS update), as a single jit'd round function.
+-> OTA upload -> PS update).
+
+``run_fl`` is a thin wrapper over the scan-compiled experiment engine
+(``fl.engine``, DESIGN.md §Engine): the round loop runs as chunked
+``lax.scan`` on device, minibatches are sampled on device from the round
+key, and per-round metric traces come back as stacked arrays.  On the
+default full-batch path it is bit-identical to the historical host loop,
+which is preserved verbatim as ``run_fl_legacy`` (the benchmark baseline
+and the equivalence oracle in tests/test_engine.py).
 
 Works for any (loss_fn, params) pair — the paper's MLP and the transformer
 examples share this runtime.  Devices are vmapped over stacked local
@@ -11,7 +19,8 @@ The wireless side is scenario-pluggable (DESIGN.md §Scenarios): by default
 rounds draw i.i.d. Rayleigh fading from ``gains``; pass a
 scenarios.FadingProcess to run any registered scenario family (Rician,
 Nakagami, Gauss-Markov correlated rounds, device dropout) through the same
-jit'd round function.
+compiled round body.  For whole scheme x seed grids in one compiled
+program, use ``fl.engine.run_fleet``.
 """
 from __future__ import annotations
 
@@ -23,9 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ota
 from repro.core.power_control import PowerControl
-from repro.optim.optimizers import clip_by_global_norm
+from repro.fl import engine as engine_mod
 
 PyTree = Any
 
@@ -41,9 +49,20 @@ class FLRunConfig:
     clip_to_gmax: bool = True
 
 
+class History(list):
+    """Legacy eval-cadence history (list of dicts) with the engine's
+    per-round metric traces attached: ``history.traces`` maps metric name
+    (grad_norm_mean / active_devices / noise_scale) to a [num_rounds]
+    array — every round, not just eval rounds."""
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self.traces = {}
+
+
 def make_round_fn(loss_fn: Callable, scheme: PowerControl,
                   gains: np.ndarray, run: FLRunConfig, fading=None):
-    """Returns the jit'd round function.
+    """Returns the jit'd single-round function (legacy-shaped API).
 
     Default (fading None — the paper's i.i.d. Rayleigh channel):
         (params, stacked_batch, key) -> (params, metrics).
@@ -54,51 +73,79 @@ def make_round_fn(loss_fn: Callable, scheme: PowerControl,
             -> (params, metrics, fading_state).
     For an i.i.d. process the two paths consume keys identically, so the
     baseline scenario reproduces the default path bit-for-bit.
+
+    The body is the engine's round body with on-device batch sampling
+    disabled (the caller owns the batch), so a host loop over this function
+    and the scan engine execute identical per-round programs.
     """
-    gains_j = jnp.asarray(gains)
-
-    def device_grad(params, batch):
-        g = jax.grad(loss_fn)(params, batch)
-        if run.clip_to_gmax:
-            g, norm = clip_by_global_norm(g, run.gmax)
-        else:
-            norm = jnp.sqrt(sum(jnp.sum(jnp.square(l))
-                                for l in jax.tree.leaves(g)))
-        return g, norm
-
-    def finish_round(params, grads, norms, h, k_ota):
-        g_hat = ota.ota_aggregate(grads, scheme, h, k_ota)
-        new_params = jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32)
-                          - run.eta * g.astype(jnp.float32)).astype(p.dtype),
-            params, g_hat)
-        s, _ = scheme.round_coeffs(h, k_ota)
-        metrics = {
-            "grad_norm_mean": jnp.mean(norms),
-            "active_devices": jnp.sum((s > 0).astype(jnp.float32)),
-        }
-        return new_params, metrics
+    body = engine_mod.make_round_body(loss_fn, gains, run, fading=fading,
+                                      sample_on_device=False)
 
     if fading is None:
         def round_fn(params, stacked_batch, key):
-            k_fade, k_ota, k_batch = jax.random.split(key, 3)
-            grads, norms = jax.vmap(lambda b: device_grad(params, b))(
-                stacked_batch)
-            h = ota.draw_fading(k_fade, gains_j)
-            return finish_round(params, grads, norms, h, k_ota)
-
+            params, _, metrics = body(scheme, run.eta, params, None, key,
+                                      stacked_batch)
+            return params, metrics
         return jax.jit(round_fn)
 
     def round_fn(params, stacked_batch, key, fading_state):
-        k_fade, k_ota, k_batch = jax.random.split(key, 3)
-        grads, norms = jax.vmap(lambda b: device_grad(params, b))(
-            stacked_batch)
-        fading_state, h = fading.step(fading_state, k_fade)
-        new_params, metrics = finish_round(params, grads, norms, h, k_ota)
-        return new_params, metrics, fading_state
+        params, fading_state, metrics = body(scheme, run.eta, params,
+                                             fading_state, key,
+                                             stacked_batch)
+        return params, metrics, fading_state
 
     return jax.jit(round_fn)
 
+
+def _history_from_result(res: engine_mod.FLResult, scheme_name: str,
+                         t0: float) -> History:
+    hist = History()
+    active = res.traces.get("active_devices")
+    for t, ev in res.evals:
+        row = dict(ev)
+        row.update(round=t, scheme=scheme_name,
+                   active=float(active[t]), wall=time.time() - t0)
+        hist.append(row)
+    hist.traces = res.traces
+    return hist
+
+
+def run_fl(loss_fn: Callable, params: PyTree, scheme: PowerControl,
+           gains: np.ndarray, data: tuple, run: FLRunConfig,
+           eval_fn: Optional[Callable] = None, log: bool = False,
+           fading=None, flat: bool = False):
+    """Run the full FL loop on the scan engine.
+
+    data = (x_dev [N,D,...], y_dev [N,D]) stacked per-device datasets.
+    eval_fn(params) -> dict of scalars, called every run.eval_every rounds.
+    fading: optional scenarios.FadingProcess drawing the per-round channel
+    (None = the paper's i.i.d. Rayleigh on ``gains``); its state is
+    initialized from a key folded out of the run seed so the main key
+    stream is untouched.
+    flat: route the aggregation through the fused Pallas kernel
+    (kernels.ops.ota_aggregate_pytree) instead of the per-leaf tree-map
+    oracle; same noise realizations, float-rounding-level differences.
+
+    Bit-identical to ``run_fl_legacy`` for the default full-batch path.
+    With 0 < batch_size < D, minibatches are sampled **on device** from the
+    round key (the legacy host-numpy sampling is retired with the host
+    loop), so minibatch trajectories differ from run_fl_legacy's while
+    following the same sampling law.
+
+    Returns (params, history): history is the legacy eval-cadence list of
+    dicts, with per-round metric traces attached as ``history.traces``.
+    """
+    t0 = time.time()
+    res = engine_mod.run_rounds(loss_fn, params, scheme, gains, data, run,
+                                eval_fn=eval_fn, fading=fading, flat=flat,
+                                log=log)
+    return res.params, _history_from_result(res, scheme.name, t0)
+
+
+# ---------------------------------------------------------------------------
+# The historical host loop, preserved as the benchmark baseline and the
+# equivalence oracle for the scan engine.
+# ---------------------------------------------------------------------------
 
 def _sample_batches(x_dev, y_dev, batch_size: int, rng: np.random.Generator):
     if batch_size <= 0 or batch_size >= x_dev.shape[1]:
@@ -110,18 +157,15 @@ def _sample_batches(x_dev, y_dev, batch_size: int, rng: np.random.Generator):
     return xb, yb
 
 
-def run_fl(loss_fn: Callable, params: PyTree, scheme: PowerControl,
-           gains: np.ndarray, data: tuple, run: FLRunConfig,
-           eval_fn: Optional[Callable] = None, log: bool = False,
-           fading=None):
-    """Run the full FL loop.
+def run_fl_legacy(loss_fn: Callable, params: PyTree, scheme: PowerControl,
+                  gains: np.ndarray, data: tuple, run: FLRunConfig,
+                  eval_fn: Optional[Callable] = None, log: bool = False,
+                  fading=None):
+    """The pre-engine host loop: one jitted round call per round, numpy
+    batch sampling, host->device batch copy every round.  Kept as the
+    wall-clock baseline for benchmarks/fig2.py and as the oracle the scan
+    engine is tested bit-identical against (default path).
 
-    data = (x_dev [N,D,...], y_dev [N,D]) stacked per-device datasets.
-    eval_fn(params) -> dict of scalars, called every run.eval_every rounds.
-    fading: optional scenarios.FadingProcess drawing the per-round channel
-    (None = the paper's i.i.d. Rayleigh on ``gains``); its state is
-    initialized from a key folded out of the run seed so the main key
-    stream is untouched.
     Returns (params, history list of dicts).
     """
     round_fn = make_round_fn(loss_fn, scheme, gains, run, fading=fading)
@@ -130,7 +174,8 @@ def run_fl(loss_fn: Callable, params: PyTree, scheme: PowerControl,
     key = jax.random.PRNGKey(run.seed)
     fading_state = None
     if fading is not None:
-        fading_state = fading.init(jax.random.fold_in(key, 0x5CE7A810))
+        fading_state = fading.init(
+            jax.random.fold_in(key, engine_mod.FADING_INIT_SALT))
     history = []
     t0 = time.time()
     for t in range(run.num_rounds):

@@ -12,6 +12,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import ota_aggregate as oa
@@ -47,6 +48,59 @@ def ota_aggregate(g: jax.Array, s: jax.Array, z: jax.Array,
                                   jnp.asarray(noise_scale, gp.dtype),
                                   block_d=blk, interpret=interpret)
     return out[:d0]
+
+
+def ota_aggregate_pytree(stacked: jax.Array, s: jax.Array, noise_scale,
+                         key: jax.Array, *, block_d: int = 64 * 1024,
+                         use_kernel: Optional[bool] = None,
+                         interpret: Optional[bool] = None):
+    """Fused OTA aggregation over a whole gradient *pytree* in one launch.
+
+    ``stacked`` is a pytree whose every leaf has a leading client axis
+    [N, ...].  The leaves are raveled once into a single [N, D] matrix and
+    the per-round hot path — sum_m s_m g_m + noise_scale * z, f32
+    accumulation — runs as ONE flattened reduction instead of a tree of
+    per-leaf weighted sums plus per-leaf noise draws.
+
+    Dispatch: on TPU the reduction is the Pallas ``ota_aggregate`` kernel;
+    on CPU it is the pure-jnp oracle ``ref.ota_aggregate_ref`` on the same
+    flattened arrays — Pallas interpret mode is a correctness emulator,
+    orders of magnitude slower at runtime, so it is only entered when
+    ``use_kernel=True`` is forced (as the kernel equivalence tests do).
+
+    The receiver noise is a single fused draw, but it is keyed per leaf
+    exactly like ``core.ota.add_receiver_noise`` (split(key, n_leaves),
+    leaf l reads normal(keys[l], leaf_size)): the flattened path therefore
+    consumes the same randomness and produces the same noise *realizations*
+    as the tree-map oracle, so the two paths agree to float rounding.
+
+    Leaf shapes need no alignment — the [N, D] matrix is lane-padded by
+    ``ota_aggregate`` below.  Mixed leaf dtypes are accumulated in the
+    widest input dtype and cast back per leaf on unflatten.
+    """
+    from repro.kernels import ref
+
+    leaves, treedef = jax.tree.flatten(stacked)
+    sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+    dtype = jnp.result_type(*[l.dtype for l in leaves])
+    n = leaves[0].shape[0]
+    g = jnp.concatenate([l.reshape(n, -1).astype(dtype) for l in leaves],
+                        axis=1)
+    keys = jax.random.split(key, len(leaves))
+    z = jnp.concatenate([jax.random.normal(k, (sz,))
+                         for k, sz in zip(keys, sizes)]).astype(dtype)
+    if use_kernel is None:
+        use_kernel = not _on_cpu()
+    if use_kernel:
+        out = ota_aggregate(g, s, z, noise_scale, block_d=block_d,
+                            interpret=interpret)
+    else:
+        out = ref.ota_aggregate_ref(g, s, z,
+                                    jnp.asarray(noise_scale, dtype))
+    offsets = np.cumsum([0] + sizes)
+    parts = [out[offsets[i]:offsets[i + 1]].reshape(l.shape[1:]).astype(
+        l.dtype) for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, parts)
 
 
 @functools.partial(jax.jit,

@@ -11,9 +11,16 @@ NEG_INF = -1e30
 
 def ota_aggregate_ref(g: jax.Array, s: jax.Array, z: jax.Array,
                       noise_scale: jax.Array) -> jax.Array:
-    """out = sum_m s_m g_m + noise_scale * z  (g: [N, D])."""
-    return jnp.sum(g * s[:, None].astype(g.dtype), axis=0) \
-        + (noise_scale * z).astype(g.dtype)
+    """out = sum_m s_m g_m + noise_scale * z  (g: [N, D]).
+
+    Accumulates in f32 and casts on write, matching the Pallas kernel (and
+    core.ota.weighted_sum): casting s to a low-precision g dtype before the
+    reduction would lose coefficient precision.
+    """
+    acc = jnp.sum(g.astype(jnp.float32) * s[:, None].astype(jnp.float32),
+                  axis=0)
+    return (acc + noise_scale.astype(jnp.float32)
+            * z.astype(jnp.float32)).astype(g.dtype)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -1,0 +1,371 @@
+"""Scan/vmap experiment engine (fl.engine, DESIGN.md §Engine).
+
+Equivalence contract:
+  * scan engine vs legacy host loop: BITWISE on the default Rayleigh path
+    and on a stateful (Gauss-Markov) scenario — same key streams, same
+    compiled constants, same op order.
+  * vmapped [scheme x seed] fleet vs per-scheme runs: run-for-run to float
+    rounding (scheme state rides as vmapped operands, so XLA constant
+    folding differs; trajectories agree to ~1e-5 over tens of rounds).
+  * flattened (Pallas-dispatch) aggregation vs per-leaf tree oracle:
+    identical noise realizations, float-rounding agreement, across
+    non-lane-aligned parameter shapes, kernel exercised in interpret mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, ota, power_control as pcm, scenarios as scn
+from repro.data import partition, synthetic
+from repro.fl import engine as eng
+from repro.fl.server import FLRunConfig, make_round_fn, run_fl, run_fl_legacy
+from repro.kernels import ops as kops
+from repro.models import mlp
+from repro.models.param import init_params
+from tests.helpers import make_prm
+
+HIDDEN = 32
+
+
+def small_loss(params, batch):
+    return mlp.mlp_loss(params, batch)
+
+
+@pytest.fixture(scope="module")
+def world():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=0))
+    x, y, xt, yt = synthetic.mnist_like(40, seed=0)
+    shards = partition.partition_by_label(x, y, 10, seed=0)
+    data = partition.stack_shards(shards)
+    prm = make_prm(dep.gains, d=10000)
+    params0 = init_params(mlp.mlp_defs(hidden=HIDDEN), jax.random.PRNGKey(0))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    ev = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+    return dep, prm, data, params0, ev
+
+
+def _tree_equal(a, b):
+    return all(bool(jnp.all(a[k] == b[k])) for k in a)
+
+
+def _tree_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(a[k] - b[k]))) for k in a)
+
+
+# ---------------------------------------------------------------------------
+# chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e", [(1, 10), (10, 10), (13, 5), (150, 10),
+                                 (7, 3), (20, 20)])
+def test_chunk_lengths_match_legacy_eval_cadence(t, e):
+    legacy_evals = [r for r in range(t) if r % e == 0 or r == t - 1]
+    lengths = eng.chunk_lengths(t, e, with_eval=True)
+    assert sum(lengths) == t
+    ends = np.cumsum(lengths) - 1
+    assert list(ends) == legacy_evals
+    assert len(set(lengths)) <= 3          # at most 3 compiled scan lengths
+    assert eng.chunk_lengths(t, e, with_eval=False) == [t]
+
+
+# ---------------------------------------------------------------------------
+# scan engine vs legacy host loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["sca", "bbfl_alternative"])
+def test_scan_engine_bitwise_default_path(world, scheme):
+    dep, prm, data, params0, ev = world
+    pc = pcm.make_power_control(scheme, dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=11, eval_every=4)
+    p_legacy, h_legacy = run_fl_legacy(small_loss, params0, pc, dep.gains,
+                                       data, run, ev)
+    p_scan, h_scan = run_fl(small_loss, params0, pc, dep.gains, data, run,
+                            ev)
+    assert _tree_equal(p_legacy, p_scan)
+    assert [r["acc"] for r in h_legacy] == [r["acc"] for r in h_scan]
+    assert [r["round"] for r in h_legacy] == [r["round"] for r in h_scan]
+    # satellite: per-round traces surfaced, not just eval rounds
+    for name in ("grad_norm_mean", "active_devices", "noise_scale"):
+        assert h_scan.traces[name].shape == (run.num_rounds,)
+    assert np.all(np.isfinite(h_scan.traces["grad_norm_mean"]))
+
+
+def test_scan_engine_bitwise_stateful_scenario(world):
+    """Gauss-Markov fading state threads through the scan carry."""
+    _, _, data, params0, ev = world
+    sc = scn.get_scenario("disk_markov")
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=10000, gmax=10.0)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    pc = pcm.make_power_control("zero_bias", dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=9, eval_every=4)
+    p_legacy, _ = run_fl_legacy(small_loss, params0, pc, dep.gains, data,
+                                run, ev, fading=fp)
+    p_scan, h_scan = run_fl(small_loss, params0, pc, dep.gains, data, run,
+                            ev, fading=fp)
+    assert _tree_equal(p_legacy, p_scan)
+    assert h_scan.traces["active_devices"].shape == (run.num_rounds,)
+
+
+def test_metrics_derive_from_applied_coefficients(world):
+    """Satellite fix: active_devices must come from the same (s, ns) the
+    aggregation applied.  bbfl_alternative randomizes round_coeffs, so the
+    old unsplit-key recomputation disagreed on rounds where the two
+    bernoulli draws differed."""
+    dep, prm, data, params0, _ = world
+    pc = pcm.make_power_control("bbfl_alternative", dep, prm)
+    run = FLRunConfig(eta=0.05, gmax=10.0)
+    round_fn = make_round_fn(small_loss, pc, dep.gains, run)
+    batch = tuple(jnp.asarray(a) for a in data)
+    gains_j = jnp.asarray(dep.gains)
+    interior = int(pc.mask.sum())
+    saw = set()
+    for i in range(12):
+        sub = jax.random.PRNGKey(100 + i)
+        _, metrics = round_fn(params0, batch, sub)
+        k_fade, k_ota, _ = jax.random.split(sub, 3)
+        k_coeff, _ = ota.split_ota_key(k_ota)
+        h = ota.draw_fading(k_fade, gains_j)
+        s, _ = pc.round_coeffs(h, k_coeff)
+        expect = float(jnp.sum((s > 0).astype(jnp.float32)))
+        assert float(metrics["active_devices"]) == expect
+        saw.add(expect)
+    # both branches of the alternation actually exercised
+    assert saw == {float(interior), float(dep.num_devices)}
+
+
+def test_minibatch_sampled_on_device(world):
+    """0 < batch_size < D consumes the k_batch lane: deterministic per
+    seed, different from the full-batch trajectory, still learning-shaped
+    (finite grads, all devices active for ideal)."""
+    dep, prm, data, params0, ev = world
+    pc = pcm.make_power_control("ideal", dep, prm)
+    run_mb = FLRunConfig(eta=0.05, num_rounds=6, eval_every=5, batch_size=8)
+    p1, h1 = run_fl(small_loss, params0, pc, dep.gains, data, run_mb, ev)
+    p2, h2 = run_fl(small_loss, params0, pc, dep.gains, data, run_mb, ev)
+    assert _tree_equal(p1, p2)                      # same seed -> same run
+    run_fb = FLRunConfig(eta=0.05, num_rounds=6, eval_every=5)
+    p3, _ = run_fl(small_loss, params0, pc, dep.gains, data, run_fb, ev)
+    assert not _tree_equal(p1, p3)                  # minibatch != full batch
+    assert np.all(np.isfinite(h1.traces["grad_norm_mean"]))
+    assert np.all(h1.traces["active_devices"] == dep.num_devices)
+
+
+# ---------------------------------------------------------------------------
+# vmapped fleet vs per-scheme runs
+# ---------------------------------------------------------------------------
+
+def test_fleet_matches_per_scheme_runs(world):
+    dep, prm, data, params0, ev = world
+    names = ["ideal", "sca", "vanilla", "bbfl_alternative"]
+    schemes = [pcm.make_power_control(n, dep, prm) for n in names]
+    seeds = (0, 3)
+    run = FLRunConfig(eta=0.05, num_rounds=10, eval_every=4)
+    res = eng.run_fleet(small_loss, params0, schemes, dep.gains, data, run,
+                        ev, seeds=seeds, flat=False)
+    assert res.names == tuple(names)
+    assert res.traces["active_devices"].shape == (4, 2, run.num_rounds)
+    for i, name in enumerate(names):
+        for j, seed in enumerate(seeds):
+            run_ij = FLRunConfig(eta=0.05, num_rounds=10, eval_every=4,
+                                 seed=seed)
+            p_ref, h_ref = run_fl(small_loss, params0, schemes[i],
+                                  dep.gains, data, run_ij, ev)
+            cell = jax.tree.map(lambda a: a[i, j], res.params)
+            assert _tree_maxdiff(p_ref, cell) < 1e-4, (name, seed)
+            # integer-valued trace must agree exactly
+            assert np.array_equal(res.traces["active_devices"][i, j],
+                                  h_ref.traces["active_devices"])
+            for t_idx, (t, evd) in enumerate(res.evals):
+                assert abs(float(evd["acc"][i, j])
+                           - h_ref[t_idx]["acc"]) < 5e-3
+    # seed axis is real: different seeds, different trajectories
+    a = jax.tree.map(lambda x: x[1, 0], res.params)
+    b = jax.tree.map(lambda x: x[1, 1], res.params)
+    assert not _tree_equal(a, b)
+
+
+def test_fleet_per_scheme_etas(world):
+    dep, prm, data, params0, ev = world
+    schemes = [pcm.make_power_control("ideal", dep, prm) for _ in range(2)]
+    run = FLRunConfig(eta=0.05, num_rounds=4, eval_every=3)
+    res = eng.run_fleet(small_loss, params0, schemes, dep.gains, data, run,
+                        ev, etas=[0.05, 0.01], flat=False)
+    a = jax.tree.map(lambda x: x[0, 0], res.params)
+    b = jax.tree.map(lambda x: x[1, 0], res.params)
+    assert not _tree_equal(a, b)
+    run2 = FLRunConfig(eta=0.01, num_rounds=4, eval_every=3)
+    p_ref, _ = run_fl(small_loss, params0, schemes[1], dep.gains, data,
+                      run2, ev)
+    assert _tree_maxdiff(p_ref, b) < 1e-5
+
+
+def test_fleet_stateful_scenario_matches_single_runs(world):
+    """[K x S] fleet on a dropout scenario: per-cell fading/dropout streams
+    match the standalone runs (scenarios state carries the batch axes)."""
+    _, _, data, params0, ev = world
+    sc = scn.get_scenario("disk_dropout")
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=10000, gmax=10.0)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    schemes = [pcm.make_power_control(n, dep, prm)
+               for n in ("sca", "vanilla")]
+    run = FLRunConfig(eta=0.05, num_rounds=8, eval_every=7)
+    res = eng.run_fleet(small_loss, params0, schemes, dep.gains, data, run,
+                        ev, fading=fp, flat=False)
+    assert res.fading_state.shape == (2, 1, dep.num_devices)
+    for i in range(2):
+        p_ref, h_ref = run_fl(small_loss, params0, schemes[i], dep.gains,
+                              data, run, ev, fading=fp)
+        cell = jax.tree.map(lambda a: a[i, 0], res.params)
+        assert _tree_maxdiff(p_ref, cell) < 1e-4
+        # dropout pattern is key-determined -> must agree exactly
+        assert np.array_equal(res.traces["active_devices"][i, 0],
+                              h_ref.traces["active_devices"])
+
+
+# ---------------------------------------------------------------------------
+# flattened aggregation vs tree oracle
+# ---------------------------------------------------------------------------
+
+def _odd_tree(key, n=10):
+    """Leaves with deliberately non-lane-aligned trailing dims."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(k1, (n, 33, 17)),
+        "b": jax.random.normal(k2, (n, 29)),
+        "t": jax.random.normal(k3, (n, 5, 3, 7)),
+    }
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_flat_aggregation_matches_tree_oracle(use_kernel):
+    """Flattened path (jnp fused on CPU / Pallas interpret when forced) vs
+    the per-leaf tree oracle: same noise realizations, fp-level agreement,
+    across non-aligned shapes."""
+    tree = _odd_tree(jax.random.PRNGKey(0))
+    s = jax.random.uniform(jax.random.PRNGKey(1), (10,))
+    ns = jnp.float32(0.37)
+    key = jax.random.PRNGKey(2)
+    ref = ota.apply_round_coeffs(tree, s, ns, key, flat=False)
+    out = kops.ota_aggregate_pytree(tree, s, ns, key,
+                                    use_kernel=use_kernel, interpret=True)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(ref[k]), np.asarray(out[k]),
+                                   rtol=2e-6, atol=2e-6)
+        assert out[k].shape == ref[k].shape
+    # identical *realizations*: the residual is tiny relative to the noise
+    zero = jax.tree.map(jnp.zeros_like, tree)
+    noise_ref = ota.apply_round_coeffs(zero, s, ns, key, flat=False)
+    noise_flat = kops.ota_aggregate_pytree(zero, s, ns, key,
+                                           use_kernel=use_kernel,
+                                           interpret=True)
+    for k in noise_ref:
+        np.testing.assert_allclose(np.asarray(noise_ref[k]),
+                                   np.asarray(noise_flat[k]), rtol=1e-6,
+                                   atol=1e-7)
+        assert float(jnp.max(jnp.abs(noise_ref[k]))) > 0.01 * float(ns)
+
+
+def test_flat_engine_run_close_to_tree_engine_run(world):
+    dep, prm, data, params0, ev = world
+    pc = pcm.make_power_control("sca", dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=6, eval_every=5)
+    p_tree, _ = run_fl(small_loss, params0, pc, dep.gains, data, run, ev)
+    p_flat, _ = run_fl(small_loss, params0, pc, dep.gains, data, run, ev,
+                       flat=True)
+    assert _tree_maxdiff(p_tree, p_flat) < 1e-4
+
+
+def test_weighted_sum_accumulates_f32():
+    """Satellite fix: bf16 leaves must not quantize the coefficients before
+    the reduction."""
+    n, d = 10, 64
+    g32 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    s = jnp.linspace(1e-3, 1.7e-3, n)       # spacing below bf16 resolution
+    g16 = g32.astype(jnp.bfloat16)
+    out = ota.weighted_sum({"g": g16}, s)["g"]
+    assert out.dtype == jnp.bfloat16
+    exact = jnp.sum(s[:, None] * g32, axis=0)
+    old = jnp.sum(s.astype(jnp.bfloat16)[:, None] * g16, axis=0)
+    err_new = float(jnp.max(jnp.abs(out.astype(jnp.float32) - exact)))
+    err_old = float(jnp.max(jnp.abs(old.astype(jnp.float32) - exact)))
+    assert err_new < err_old
+
+
+# ---------------------------------------------------------------------------
+# scheme stacking
+# ---------------------------------------------------------------------------
+
+def test_stack_schemes_representations(world):
+    dep, prm, _, _, _ = world
+    homo = [pcm.make_power_control(n, dep, prm)
+            for n in ("sca", "lcpc", "zero_bias")]
+    st = pcm.stack_schemes(homo)
+    assert type(st) is pcm.TruncatedInversion
+    assert st.names == ("sca", "lcpc", "zero_bias")
+    assert st.gamma.shape == (3, dep.num_devices)
+
+    hetero = [pcm.make_power_control(n, dep, prm)
+              for n in ("ideal", "opc", "vanilla")]
+    sb = pcm.stack_schemes(hetero)
+    assert type(sb) is pcm.SchemeBatch
+    assert len(sb) == 3
+
+    # bbfl interior vs alternative differ in static config -> union
+    bb = [pcm.make_power_control("bbfl_interior", dep, prm),
+          pcm.make_power_control("bbfl_alternative", dep, prm)]
+    assert type(pcm.stack_schemes(bb)) is pcm.SchemeBatch
+
+
+def test_stacked_coeffs_bitwise_all_schemes(world):
+    """Every scheme through the vmapped union == its standalone
+    round_coeffs, bitwise."""
+    dep, prm, _, _, _ = world
+    names = list(pcm.SCHEMES)
+    schemes = [pcm.make_power_control(n, dep, prm) for n in names]
+    sb = pcm.stack_schemes(schemes)
+    h = ota.draw_fading(jax.random.PRNGKey(5), jnp.asarray(dep.gains))
+    keys = jax.random.split(jax.random.PRNGKey(6), len(names))
+    s_b, ns_b = pcm.round_coeffs_fleet(sb, h, keys)
+    for i, pc in enumerate(schemes):
+        s_ref, ns_ref = pc.round_coeffs(h, keys[i])
+        assert bool(jnp.all(s_ref == s_b[i])), pc.name
+        assert bool(jnp.all(ns_ref == ns_b[i])), pc.name
+
+
+def test_fading_process_batch_axes():
+    """init_batch/step_batch carry [K, S] grid axes and reproduce the
+    per-cell scalar init/step streams exactly."""
+    sc = scn.get_scenario("disk_markov")
+    dep = scn.realize(sc)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    keys = jax.random.split(jax.random.PRNGKey(0), 6).reshape(2, 3, 2)
+    state = fp.init_batch(keys)
+    assert state.shape == (2, 3, dep.num_devices)
+    step_keys = jax.random.split(jax.random.PRNGKey(1), 6).reshape(2, 3, 2)
+    new_state, h = fp.step_batch(state, step_keys)
+    assert new_state.shape == state.shape
+    assert h.shape == (2, 3, dep.num_devices)
+    for i in range(2):
+        for j in range(3):
+            s_ref = fp.init(keys[i, j])
+            assert bool(jnp.all(s_ref == state[i, j]))
+            s1, h1 = fp.step(s_ref, step_keys[i, j])
+            assert bool(jnp.all(s1 == new_state[i, j]))
+            assert bool(jnp.all(h1 == h[i, j]))
+
+
+def test_scheme_pytree_roundtrip(world):
+    dep, prm, _, _, _ = world
+    pc = pcm.make_power_control("sca", dep, prm)
+    leaves, treedef = jax.tree.flatten(pc)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.name == "sca"
+    assert np.array_equal(rebuilt.gamma, pc.gamma)
+    h = ota.draw_fading(jax.random.PRNGKey(1), jnp.asarray(dep.gains))
+    k = jax.random.PRNGKey(2)
+    s1, n1 = pc.round_coeffs(h, k)
+    s2, n2 = rebuilt.round_coeffs(h, k)
+    assert bool(jnp.all(s1 == s2)) and bool(jnp.all(n1 == n2))
