@@ -56,6 +56,53 @@ def smoke(seed: int = 0) -> None:
         print(_csv({"bench": f"smoke_{r['scenario']}_{r['scheme']}",
                     "final_acc": r["final_acc"]}), flush=True)
     print(f"# smoke scenario fleets: {time.time() - t0:.1f}s", flush=True)
+
+    # --- batched SCA solver + AdaptiveSCA engine gate (DESIGN.md §Solvers):
+    # a tiny batch solve must track the scipy oracle, and the adaptive
+    # scheme must re-design inside a compiled Gauss-Markov fleet ---
+    t0 = time.time()
+    from repro import solvers
+    from repro.core import sca as sca_mod, theory
+    from benchmarks.sca_bench import make_prm as solver_prm
+    prms = [solver_prm(6, s) for s in range(4)]
+    br = solvers.solve_batch(prms)
+    ref = sca_mod.solve_sca(prms[0]).objective
+    gap = br.objective[0] / ref - 1.0
+    assert abs(gap) < 1e-3, (br.objective[0], ref)
+    assert np.all(np.isfinite(br.gamma)) and np.all(br.gamma > 0)
+    print(_csv({"bench": "smoke_solver_batch4", "gap_vs_scipy": f"{gap:.2e}",
+                "objective": round(float(br.objective[0]), 4)}), flush=True)
+
+    import jax
+    from repro.core import power_control as pcm, scenarios as scn
+    from repro.data import partition, synthetic
+    from repro.fl import engine as eng
+    from repro.fl.server import FLRunConfig
+    from repro.models import mlp
+    from repro.models.param import init_params
+    sc = scn.get_scenario("disk_markov")
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=10000, gmax=10.0, eta=0.05, kappa_sq=4.0)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    x, y, xt, yt = synthetic.mnist_like(40, seed=seed)
+    data = partition.stack_shards(partition.partition_by_label(x, y, 10,
+                                                               seed=seed))
+    params0 = init_params(mlp.mlp_defs(hidden=32), jax.random.PRNGKey(seed))
+    run_cfg = FLRunConfig(eta=0.05, num_rounds=4, eval_every=2)
+    pc = pcm.make_power_control("adaptive_sca", dep, prm)
+    res = eng.run_fleet(mlp.mlp_loss, params0, [pc], dep.gains, data,
+                        run_cfg, fading=fp, flat=False)
+    assert res.designs is not None and len(res.designs) >= 2, res.designs
+    g0, g1 = res.designs[0][1], res.designs[1][1]
+    moved = float(np.max(np.abs(g1 - g0) / np.abs(g0)))
+    assert moved > 1e-4, "adaptive re-design did not move the design"
+    assert all(np.all(np.isfinite(np.asarray(v))) for v in
+               jax.tree.leaves(res.params))
+    print(_csv({"bench": "smoke_adaptive_sca",
+                "design_moved_rel": round(moved, 4),
+                "redesigns": len(res.designs) - 1}), flush=True)
+    print(f"# smoke solver + adaptive engine: {time.time() - t0:.1f}s",
+          flush=True)
     print("# smoke OK", flush=True)
 
 
@@ -78,6 +125,11 @@ def main(argv=None) -> None:
     # --- SCA solver quality/timing (paper §III-B) ---
     from benchmarks import sca_bench
     for row in sca_bench.run(num_seeds=3, sizes=(10, 20)):
+        print(_csv(row), flush=True)
+
+    # --- scipy-vs-batched-solver benchmark (DESIGN.md §Solvers); persists
+    # experiments/sca/solver_benchmark.json ---
+    for row in sca_bench.solver_rows(sca_bench.solver_benchmark()):
         print(_csv(row), flush=True)
 
     # --- bias-variance trade-off sweep (paper §III-A / Theorem 1) ---

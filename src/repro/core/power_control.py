@@ -33,6 +33,11 @@ Schemes (paper §IV):
   ideal             noiseless FedAvg (upper reference, eq. (2)).
   zero_bias         structured zero-average-bias truncated inversion
                     (p_m = 1/N exactly; the 'weakest channel binds' regime).
+
+Beyond the paper grid, ``adaptive_sca`` (class ``AdaptiveSCA``) re-solves
+the SCA design between fl.engine scan chunks from the scenario's current
+statistical CSI (DESIGN.md §Solvers) — the compiled batched solver in
+``repro.solvers`` is what makes the in-training re-design affordable.
 """
 from __future__ import annotations
 
@@ -122,8 +127,28 @@ def _make_truncated(name: str, gamma: np.ndarray, prm: OTAParams) -> TruncatedIn
         thresholds=theory.chi_threshold(gamma, prm), n0=prm.n0)
 
 
-def make_sca(deployment: Deployment, prm: OTAParams, **kw) -> TruncatedInversion:
-    res = sca_mod.solve_sca(prm, **kw)
+def make_sca(deployment: Deployment, prm: OTAParams, method: str = "jax",
+             **kw) -> TruncatedInversion:
+    """The paper's SCA design.  ``method="jax"`` (default) runs the compiled
+    batched solver (repro.solvers, DESIGN.md §Solvers); ``method="scipy"``
+    runs the host SLSQP reference oracle (core.sca.solve_sca).  Both descend
+    the same (P1) objective from the same start and agree to ~1e-6 relative
+    on the reference cases (benchmarks/sca_bench.py tracks the gap)."""
+    if method == "scipy":
+        res = sca_mod.solve_sca(prm, **kw)
+    elif method == "jax":
+        from repro import solvers  # deferred: keep core importable fast
+        # translate the legacy solve_sca budget kwargs onto SolverConfig so
+        # pre-existing make_power_control("sca", ..., max_iters=...) callers
+        # keep working across the default-path switch
+        legacy = {k: kw.pop(k) for k in ("max_iters", "tol", "backtracks")
+                  if k in kw}
+        cfg = kw.pop("cfg", solvers.DEFAULT_CONFIG)
+        if legacy:
+            cfg = dataclasses.replace(cfg, **legacy)
+        res = solvers.solve(prm, cfg=cfg, **kw)
+    else:
+        raise ValueError(f"unknown sca method {method!r} (jax|scipy)")
     pc = _make_truncated("sca", res.gamma, prm)
     pc.sca_result = res  # attach for inspection
     return pc
@@ -155,6 +180,102 @@ def make_lcpc(deployment: Deployment, prm: OTAParams,
 def make_zero_bias(deployment: Deployment, prm: OTAParams,
                    slack: float = 1.0) -> TruncatedInversion:
     return _make_truncated("zero_bias", theory.zero_bias_gamma(prm, slack), prm)
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveSCA: truncated inversion whose design re-solves DURING training
+# (between fl.engine scan chunks) from the scenario's current statistical
+# CSI.  DESIGN.md §Solvers.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdaptiveSCA(TruncatedInversion):
+    """SCA design that tracks time-varying statistical CSI.
+
+    Round coefficients are plain truncated inversion (inherited), so inside
+    a scan chunk the scheme is indistinguishable from ``sca``.  Between
+    chunks the engine calls ``redesign_fn(scheme, fading, state)`` — for a
+    Gauss-Markov scenario this maps the current scattered state d_t to the
+    one-step conditional channel law (Rician: mean rho d_t + LOS, diffuse
+    variance (1-rho^2) Lambda_d), batch-solves (P1) under that conditional
+    CSI with the compiled solver, and swaps in the new design.  On static
+    CSI (``fading=None`` or rho=0) the redesign is a no-op, so static runs
+    are bit-identical to the ``sca`` scheme built by the same solver.
+
+    The design leaves carry whatever leading batch axes the engine's fleet
+    grid has ([K, S] after the first redesign) — ``round_coeffs`` is
+    per-cell under vmap either way.
+    """
+    redesign_fn: Optional[object] = None   # static aux: (pc, fading, state)
+
+
+# K-factors above this are effectively deterministic channels; the cap keeps
+# the conditional-CSI solve inside the Marcum-series accuracy envelope
+# (theory_jax._MARCUM_TERMS).
+_ADAPTIVE_K_CAP = 50.0
+
+
+def make_adaptive_sca(deployment: Deployment, prm: OTAParams,
+                      **kw) -> AdaptiveSCA:
+    """Build the adaptive scheme: initial design = the static solve on the
+    deployment's stationary CSI (identical to ``make_sca(..., "jax")``).
+
+    When K same-class AdaptiveSCA schemes are stacked into one fleet, the
+    first scheme's redesign hook serves every row — the hook reads the
+    per-row fading state for gains, but problem constants (d, Gmax, Es,
+    N0, eta, L, kappa^2, sigma^2) come from ITS ``prm``, so rows of one
+    adaptive fleet should share those constants."""
+    from repro import solvers
+    from repro.solvers import theory_jax as tjx
+    from jax.experimental import enable_x64
+
+    cfg = kw.pop("cfg", solvers.DEFAULT_CONFIG)
+    res = solvers.solve(prm, cfg=cfg, **kw)
+    base = _make_truncated("adaptive_sca", res.gamma, prm)
+
+    def redesign(pc: AdaptiveSCA, fading, state):
+        rho = float(getattr(fading, "rho", 0.0))
+        if state is None or rho == 0.0:
+            return pc      # static CSI: nothing to track
+        with enable_x64():
+            n = prm.num_devices
+            state64 = jnp.asarray(state)                     # [..., N] complex
+            batch = state64.shape[:-1]
+            diffuse = (1.0 - rho**2) * jnp.asarray(
+                np.asarray(fading._diffuse_gains(), np.float64))
+            los = jnp.asarray(np.asarray(fading._los(), np.float64))
+            mean = los + rho * state64       # one-step conditional mean
+            nu2 = jnp.abs(mean) ** 2
+            gains_eff = (nu2 + diffuse).reshape((-1, n))     # [B, N]
+            k_eff = jnp.minimum(nu2 / diffuse,
+                                _ADAPTIVE_K_CAP).reshape((-1, n))
+            b = gains_eff.shape[0]
+
+            def row(v):
+                return jnp.broadcast_to(jnp.asarray(v, jnp.float64), (b,))
+
+            prm_b = tjx.SolverParams(
+                d=row(prm.d), gmax=row(prm.gmax), es=row(prm.es),
+                n0=row(prm.n0), gains=gains_eff,
+                sigma_sq=jnp.broadcast_to(
+                    jnp.asarray(prm.sigma_sq, jnp.float64), (b, n)),
+                eta=row(prm.eta), lsmooth=row(prm.lsmooth),
+                kappa_sq=row(prm.kappa_sq), dropout=row(prm.dropout),
+                fading_param=k_eff, family="rician")
+            out = solvers.solve_batch_device(prm_b, cfg)
+            shape = batch + (n,)
+            gamma = np.asarray(out["gamma"]).reshape(shape)
+            p = np.asarray(out["p"]).reshape(shape)
+            alpha = np.asarray(out["alpha"]).reshape(batch)
+        return dataclasses.replace(
+            pc, gamma=gamma, alpha=alpha, p=p,
+            thresholds=np.asarray(theory.chi_threshold(gamma, prm)),
+            noise_over_alpha=np.sqrt(prm.n0) / alpha)
+
+    return AdaptiveSCA(
+        name="adaptive_sca", requires_global_csi=False, gamma=base.gamma,
+        alpha=base.alpha, p=base.p, thresholds=base.thresholds, n0=prm.n0,
+        noise_over_alpha=base.noise_over_alpha, redesign_fn=redesign)
 
 
 # ---------------------------------------------------------------------------
@@ -392,8 +513,10 @@ def make_power_control(name: str, deployment: Deployment, prm: OTAParams,
         return make_ideal(deployment, prm)
     if name == "zero_bias":
         return make_zero_bias(deployment, prm, **kw)
+    if name == "adaptive_sca":
+        return make_adaptive_sca(deployment, prm, **kw)
     raise ValueError(f"unknown power-control scheme: {name!r}; "
-                     f"available: {SCHEMES}")
+                     f"available: {SCHEMES + ('adaptive_sca',)}")
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +533,8 @@ def make_power_control(name: str, deployment: Deployment, prm: OTAParams,
 _SCHEME_LEAVES = {
     TruncatedInversion: ("gamma", "alpha", "p", "thresholds", "n0",
                          "noise_over_alpha"),
+    AdaptiveSCA: ("gamma", "alpha", "p", "thresholds", "n0",
+                  "noise_over_alpha"),
     VanillaOTA: ("gamma", "alpha", "p", "bmax", "n0"),
     OPC: ("gamma", "alpha", "p", "bmax", "n0", "gmax"),
     BBFL: ("gamma", "alpha", "p", "mask", "bmax", "n0"),
@@ -569,13 +694,20 @@ def stack_schemes(schemes):
     homogeneous = (cls in _SCHEME_LEAVES
                    and all(type(pc) is cls for pc in schemes))
     if homogeneous:
-        statics = [f for f in _scheme_statics(cls) if f != "name"]
+        # redesign_fn closures are per-instance and never compare equal;
+        # same-class adaptive schemes stack with the FIRST scheme's hook
+        # (rows share the fleet's fading process and problem constants —
+        # per-row state is what the redesign actually consumes).
+        statics = [f for f in _scheme_statics(cls)
+                   if f not in ("name", "redesign_fn")]
         s0 = {f: getattr(schemes[0], f) for f in statics}
         homogeneous = all(
             all(getattr(pc, f) == s0[f] for f in statics)
             for pc in schemes[1:])
     if homogeneous:
         kw = dict(s0, name="+".join(names))
+        if "redesign_fn" in (f.name for f in dataclasses.fields(cls)):
+            kw["redesign_fn"] = schemes[0].redesign_fn
         for f in _SCHEME_LEAVES[cls]:
             vals = [getattr(pc, f) for pc in schemes]
             if all(v is None for v in vals):
@@ -588,6 +720,13 @@ def stack_schemes(schemes):
         stacked.names = names
         return stacked
 
+    unsupported = sorted({type(pc).__name__ for pc in schemes
+                          if type(pc) not in _UNION_KIND_OF})
+    if unsupported:
+        raise ValueError(
+            f"schemes of type {unsupported} cannot join a heterogeneous "
+            f"SchemeBatch union (AdaptiveSCA re-designs between chunks and "
+            f"must be stacked with same-class schemes only)")
     # only schemes that have the flag vote: truncated-inversion/ideal rows
     # are dropout-agnostic (h=0 -> chi=0 / uniform average regardless)
     dropout = {bool(pc.dropout_aware) for pc in schemes

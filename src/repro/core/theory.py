@@ -115,6 +115,14 @@ def _rayleigh_gamma_max(p: OTAParams) -> np.ndarray:
     return np.sqrt(p.d * p.gains * p.es / (2.0 * p.gmax**2))
 
 
+# Two-stage log grid for the numeric (non-Rayleigh) gamma_max search:
+# (lo, hi, points) multipliers around the previous stage's maximizer.  Shared
+# with the jnp port in repro.solvers.theory_jax so both backends pick the
+# same grid candidate (parity to float rounding, not just grid resolution).
+GAMMA_MAX_GRID_COARSE = (0.05, 20.0, 241)
+GAMMA_MAX_GRID_FINE = (0.95, 1.05, 101)
+
+
 def gamma_max(p: OTAParams) -> np.ndarray:
     """Maximizer of alpha_m(gamma) per device.
 
@@ -132,8 +140,10 @@ def gamma_max(p: OTAParams) -> np.ndarray:
         vals = grid * fading_magnitude_sf(p.gains[:, None], chi, p.fading)
         return grid[np.arange(grid.shape[0]), np.argmax(vals, axis=1)]
 
-    coarse = argmax_on(g_ray[:, None] * np.geomspace(0.05, 20.0, 241)[None, :])
-    fine = argmax_on(coarse[:, None] * np.geomspace(0.95, 1.05, 101)[None, :])
+    coarse = argmax_on(g_ray[:, None]
+                       * np.geomspace(*GAMMA_MAX_GRID_COARSE)[None, :])
+    fine = argmax_on(coarse[:, None]
+                     * np.geomspace(*GAMMA_MAX_GRID_FINE)[None, :])
     return fine
 
 

@@ -65,6 +65,9 @@ class FLResult:
     seeds         seeds swept, length S
     wall          wall-clock seconds, compile included
     fading_state  final FadingProcess state (None on the i.i.d. path)
+    designs       adaptive-scheme design trace: [(round, gamma [K, S, N])]
+                  with entry (t, g) meaning design g is in effect from
+                  round t (None for non-adaptive runs)
     """
     params: PyTree
     traces: dict
@@ -73,6 +76,7 @@ class FLResult:
     seeds: tuple
     wall: float
     fading_state: Any = None
+    designs: Optional[list] = None
 
 
 def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
@@ -249,6 +253,15 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     Every cell shares ``data`` (device-resident once) and the initial
     ``params``.  eval_fn is vmapped across the grid at each eval boundary;
     traces/evals come back with leading [K, S] axes (see FLResult).
+
+    Adaptive schemes (``power_control.AdaptiveSCA``: a ``redesign_fn``
+    attribute) re-design their power control BETWEEN scan chunks from the
+    live fading state: their design leaves are tiled to the full [K, S]
+    grid (each cell tracks its own channel trajectory), chunk boundaries
+    follow the eval cadence even without an eval_fn (the re-design
+    cadence), and the per-chunk designs come back as ``FLResult.designs``.
+    Without a fading process (static CSI) the redesign hook is a no-op and
+    the run is identical to the plain ``sca`` scheme's.
     """
     t0 = time.time()
     stacked = schemes if not isinstance(schemes, (list, tuple)) \
@@ -264,6 +277,15 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     if etas.shape != (k,):
         raise ValueError(f"etas shape {etas.shape} != ({k},)")
 
+    redesign = getattr(stacked, "redesign_fn", None)
+    adaptive = redesign is not None and fading is not None
+    if adaptive:
+        # every (scheme, seed) cell owns its design: tile the design state
+        # over the seed axis and vmap the scheme at both grid levels
+        stacked = jax.tree.map(
+            lambda a: np.repeat(np.asarray(a)[:, None], s_axis, axis=1),
+            stacked)
+
     round_body = make_round_body(loss_fn, gains, run, fading=fading,
                                  flat=flat)
 
@@ -272,7 +294,8 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         def cell(scheme, eta, params, fstate, key):
             return _scan_chunk(round_body, scheme, eta, params, fstate,
                                key, data, length)
-        per_seed = jax.vmap(cell, in_axes=(None, None, 0, 0, 0))
+        per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None, None,
+                                           0, 0, 0))
         per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
         return per_cell(stacked, etas, params_b, fstate_b, keys_b)
 
@@ -295,14 +318,18 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     if eval_fn is not None:
         eval_b = jax.jit(jax.vmap(jax.vmap(eval_fn)))
 
+    designs = [(0, np.asarray(stacked.gamma))] if adaptive else None
     evals, metric_chunks, t = [], [], 0
     for length in chunk_lengths(run.num_rounds, run.eval_every,
-                                eval_fn is not None):
+                                eval_fn is not None or adaptive):
         params_b, fading_state, keys_b, metrics = chunk(
             stacked, etas, params_b, fading_state, keys_b, data,
             length=length)
         metric_chunks.append(metrics)
         t += length
+        if adaptive and t < run.num_rounds:
+            stacked = redesign(stacked, fading, fading_state)
+            designs.append((t, np.asarray(stacked.gamma)))
         if eval_b is not None:
             ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
             evals.append((t - 1, ev))
@@ -313,4 +340,5 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                           for i, n in enumerate(names)}})
     return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
                     evals=evals, names=names, seeds=seeds,
-                    wall=time.time() - t0, fading_state=fading_state)
+                    wall=time.time() - t0, fading_state=fading_state,
+                    designs=designs)
