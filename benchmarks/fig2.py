@@ -1,7 +1,7 @@
 """Paper Fig. 2 reproduction: test accuracy (2a) and global loss (2b) vs
 FL rounds for all seven schemes on the non-iid MNIST-like task.
 
-    PYTHONPATH=src python -m benchmarks.fig2 [--bench] [--rounds N]
+    PYTHONPATH=src python -m benchmarks.fig2 [--bench] [--sharded] [--rounds N]
 
 All seven schemes run as ONE compiled scan program (fl.engine.run_fleet,
 DESIGN.md §Engine): the schemes are stacked into a SchemeBatch pytree and
@@ -39,7 +39,7 @@ from repro.configs.paper_mlp import CONFIG as PAPER
 from repro.core import channel, power_control as pcm
 from repro.core.theory import OTAParams
 from repro.data import partition, synthetic
-from repro.fl.engine import run_fleet
+from repro.fl.driver import run_fleet
 from repro.fl.server import FLRunConfig, run_fl_legacy
 from repro.models import mlp
 from repro.models.param import init_params
@@ -104,21 +104,29 @@ def _fleet_histories(res, wall_total: float):
 
 def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         schemes=SCHEMES, log=False, engine: str = "fleet",
-        batch_size: int = 0, save: bool = True):
+        batch_size: int = 0, save: bool = True, placement=None,
+        with_result: bool = False):
     """Fig. 2 histories for all schemes.
 
-    engine="fleet": one compiled scan program for the whole scheme grid.
+    engine="fleet": one compiled scan program for the whole scheme grid,
+    through the placement-aware host driver (fl.driver, DESIGN.md
+    §Placement); ``placement`` routes the grid onto hardware (None = the
+    single-device vmap path, ShardedPlacement(mesh) to shard the scheme
+    cells over a mesh).
     engine="legacy": the pre-engine host loop, one scheme at a time (the
     wall-clock baseline; bit-reproduces the committed pre-engine curves).
     batch_size=0 is the paper's full-batch §IV protocol — on it the fleet
     matches the legacy loop's trajectories (same seeds) to float rounding.
     batch_size>0 switches the fleet to on-device minibatch sampling and the
     flattened Pallas aggregation (the cheap per-PR sweep mode).
+    with_result=True also returns the driver's FLResult (the honest
+    wall_compile/wall_exec split for --bench).
     """
     dep, prm, data, (x, y), (xt, yt) = build_world(seed)
     params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
     evals = jax.jit(_make_eval(x, y, xt, yt))
 
+    res = None
     if engine == "fleet":
         run_cfg = FLRunConfig(num_rounds=num_rounds, eval_every=eval_every,
                               gmax=PAPER.gmax, seed=seed,
@@ -128,7 +136,7 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
                         run_cfg, evals,
                         etas=[ETAS.get(n, 0.05) for n in schemes],
-                        flat=batch_size > 0, log=log)
+                        flat=batch_size > 0, log=log, placement=placement)
         histories = _fleet_histories(res, res.wall)
     elif engine == "legacy":
         histories = {}
@@ -153,6 +161,8 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         with open(os.path.join(ARTIFACT_DIR, f"histories_seed{seed}.json"),
                   "w") as f:
             json.dump(histories, f, indent=1)
+    if with_result:
+        return histories, res
     return histories
 
 
@@ -194,13 +204,18 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
     """Engine-vs-legacy wall clock for the full scheme grid; writes
     experiments/fig2/engine_benchmark.json.
 
-    Three runs of the 7-scheme x num_rounds grid, all walls including
-    compile:
+    Three runs of the 7-scheme x num_rounds grid:
       legacy          pre-engine host loop, full batch (the old fig2 path)
       fleet_fullbatch one scan program, full batch — same arithmetic and
                       streams as legacy, history deltas recorded
       fleet_minibatch one scan program, on-device batch_size sampling +
                       Pallas flattened aggregation — the per-PR sweep mode
+
+    Fleet walls are split into ``compile`` (through the end of the first
+    chunk — setup + the dominant XLA compile) and ``exec`` (steady-state),
+    straight from FLResult.wall_compile / wall_exec, so the JSON speedups
+    are honest about what amortizes over longer sweeps; the legacy loop
+    compiles per round and has no meaningful split.
     """
     cfg = dict(num_rounds=num_rounds, eval_every=eval_every, seed=seed,
                save=False)
@@ -210,17 +225,20 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
     if log:
         print(f"legacy loop (full batch): {wall_legacy:.1f}s")
 
-    t0 = time.time()
-    fleet_full = run(engine="fleet", **cfg)
-    wall_full = time.time() - t0
+    fleet_full, res_full = run(engine="fleet", with_result=True, **cfg)
+    wall_full = res_full.wall
     if log:
-        print(f"scan fleet (full batch):  {wall_full:.1f}s")
+        print(f"scan fleet (full batch):  {wall_full:.1f}s "
+              f"(compile {res_full.wall_compile:.1f}s"
+              f" + exec {res_full.wall_exec:.1f}s)")
 
-    t0 = time.time()
-    fleet_mb = run(engine="fleet", batch_size=batch_size, **cfg)
-    wall_mb = time.time() - t0
+    fleet_mb, res_mb = run(engine="fleet", batch_size=batch_size,
+                           with_result=True, **cfg)
+    wall_mb = res_mb.wall
     if log:
-        print(f"scan fleet (minibatch {batch_size}): {wall_mb:.1f}s")
+        print(f"scan fleet (minibatch {batch_size}): {wall_mb:.1f}s "
+              f"(compile {res_mb.wall_compile:.1f}s"
+              f" + exec {res_mb.wall_exec:.1f}s)")
 
     deltas = _history_deltas(legacy, fleet_full)
     report = {
@@ -231,11 +249,18 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
                  "backend": jax.default_backend()},
         "wall_s": {"legacy_loop_fullbatch": round(wall_legacy, 2),
                    "fleet_fullbatch": round(wall_full, 2),
-                   "fleet_minibatch": round(wall_mb, 2)},
+                   "fleet_fullbatch_compile": round(res_full.wall_compile, 2),
+                   "fleet_fullbatch_exec": round(res_full.wall_exec, 2),
+                   "fleet_minibatch": round(wall_mb, 2),
+                   "fleet_minibatch_compile": round(res_mb.wall_compile, 2),
+                   "fleet_minibatch_exec": round(res_mb.wall_exec, 2)},
         "speedup": {
             # headline: the engine's sweep mode vs the pre-engine fig2 path
             "engine_vs_legacy": round(wall_legacy / wall_mb, 2),
             "fullbatch_engine_vs_legacy": round(wall_legacy / wall_full, 2),
+            # compile excluded: what a longer sweep actually amortizes to
+            "engine_exec_vs_legacy": round(
+                wall_legacy / max(res_mb.wall_exec, 1e-9), 2),
         },
         "equivalence": {
             "note": "fleet_fullbatch vs legacy at identical seeds/streams",
@@ -256,12 +281,28 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
     return report
 
 
+def _sharded_placement():
+    """Debug-mesh placement for --sharded (forced-8-CPU-device CI path or
+    any real multi-device host)."""
+    from repro.fl.placement import ShardedPlacement
+    from repro.launch.mesh import make_debug_mesh
+
+    if jax.device_count() < 4:
+        raise SystemExit(
+            "--sharded needs >= 4 devices; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return ShardedPlacement(make_debug_mesh(2, 2))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", action="store_true",
                     help="engine-vs-legacy wall-clock benchmark + JSON")
     ap.add_argument("--legacy", action="store_true",
                     help="run the pre-engine host loop instead of the fleet")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the scheme grid over the ('data', 'model') "
+                         "debug mesh (DESIGN.md §Placement)")
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--every", type=int, default=None,
                     help="eval cadence (default: 10, or 15 under --bench)")
@@ -270,6 +311,9 @@ def main(argv=None) -> None:
                     help="0 = full batch (paper); under --bench, the "
                          f"minibatch mode size (default {BENCH_BATCH})")
     args = ap.parse_args(argv)
+    if args.sharded and (args.legacy or args.bench):
+        raise SystemExit("--sharded applies to the fleet engine only; "
+                         "drop --legacy/--bench")
     if args.bench:
         benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
                   seed=args.seed,
@@ -278,7 +322,8 @@ def main(argv=None) -> None:
     hist = run(num_rounds=args.rounds, eval_every=args.every or 10,
                seed=args.seed,
                engine="legacy" if args.legacy else "fleet",
-               batch_size=args.batch_size, log=True)
+               batch_size=args.batch_size, log=True,
+               placement=_sharded_placement() if args.sharded else None)
     for row in summarize(hist):
         print(row)
 

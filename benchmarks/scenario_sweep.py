@@ -1,7 +1,8 @@
 """Scenario-family sweep: bias/variance/objective per power-control scheme
 across heterogeneous wireless deployments (DESIGN.md §Scenarios).
 
-    PYTHONPATH=src python -m benchmarks.scenario_sweep [--train] [--rounds N]
+    PYTHONPATH=src python -m benchmarks.scenario_sweep [--train] [--sharded]
+                                                       [--rounds N]
 
 For every scenario in the sweep grid (default: the four-family grid
 ``scenarios.SWEEP_FAMILIES`` — disk-Rayleigh baseline, Rician, shadowed,
@@ -15,8 +16,9 @@ the scenario's family-aware statistics:
 
 and emits one CSV row per (scenario, scheme).  With ``--train`` it also runs
 the paper's MLP task on each scenario's FadingProcess — the scheme axis as
-one compiled scan fleet per scenario (``fl.engine.run_fleet``) — and
-appends test accuracy.
+one compiled scan fleet per scenario, through the placement-aware driver
+(``fl.driver.run_fleet``; ``--sharded`` shards the cells over the debug
+mesh) — and appends test accuracy.
 """
 from __future__ import annotations
 
@@ -76,20 +78,24 @@ def sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
 def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
                 num_rounds: int = 100, eval_every: int = 20,
                 seed: int = 0, log: bool = False,
-                batch_size: int = 0) -> list:
+                batch_size: int = 0, placement=None) -> list:
     """Short FL runs (paper MLP task) per (scenario, scheme).
 
     Per scenario, the whole scheme axis runs as ONE compiled scan fleet
-    (fl.engine.run_fleet) on the scenario's FadingProcess — the default
+    through the placement-aware host driver (fl.driver, DESIGN.md
+    §Placement) on the scenario's FadingProcess — the default
     sca/lcpc/zero_bias grid is a homogeneous TruncatedInversion stack, so
-    a single vmapped program covers it; aggregation rides the flattened
-    Pallas hot path (DESIGN.md §Engine).
+    a single cell program covers it; aggregation rides the flattened
+    Pallas hot path (DESIGN.md §Engine).  ``placement`` maps each
+    scenario's scheme grid onto hardware (None = single-device vmap;
+    fl.placement.ShardedPlacement(mesh) shards the cells over the
+    ("data", "model") mesh).
     """
     import jax
     import jax.numpy as jnp
 
     from repro.data import partition, synthetic
-    from repro.fl.engine import run_fleet
+    from repro.fl.driver import run_fleet
     from repro.fl.server import FLRunConfig
     from repro.models import mlp
     from repro.models.param import init_params
@@ -118,7 +124,8 @@ def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
                               eval_every=eval_every, gmax=PAPER.gmax,
                               seed=seed, batch_size=batch_size)
         res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
-                        run_cfg, evals, fading=fading, flat=True, log=log)
+                        run_cfg, evals, fading=fading, flat=True, log=log,
+                        placement=placement)
         final = res.evals[-1][1]["acc"]
         for i, scheme in enumerate(schemes):
             rows.append({"scenario": sc_name, "scheme": scheme,
@@ -139,9 +146,15 @@ def main(argv=None) -> None:
                     help="sweep every registered scenario")
     ap.add_argument("--train", action="store_true",
                     help="also run short FL training per (scenario, scheme)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard each scenario's scheme grid over the "
+                         "('data', 'model') debug mesh (needs >= 4 devices)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.sharded and not args.train:
+        raise SystemExit("--sharded shards the training fleets; "
+                         "pass --train with it")
 
     names = scn.scenario_names() if args.all else scn.SWEEP_FAMILIES
     rows = sweep(names, seed=args.seed)
@@ -152,7 +165,12 @@ def main(argv=None) -> None:
         print(",".join(_fmt(r[c]) for c in cols), flush=True)
 
     if args.train:
-        trows = train_sweep(names, num_rounds=args.rounds, seed=args.seed)
+        placement = None
+        if args.sharded:
+            from benchmarks.fig2 import _sharded_placement
+            placement = _sharded_placement()
+        trows = train_sweep(names, num_rounds=args.rounds, seed=args.seed,
+                            placement=placement)
         print("scenario,scheme,final_acc,rounds")
         for r in trows:
             print(f"{r['scenario']},{r['scheme']},{r['final_acc']},"

@@ -54,3 +54,25 @@ for i, name in enumerate(names):
     print(f"{name:8s} acc: {traj}")
 print(f"one compiled fleet, wall {res.wall:.1f}s; per-round traces: "
       f"{sorted(res.traces)} shape {res.traces['active_devices'].shape}")
+
+# 5. the SAME fleet through the placement layer (DESIGN.md §Placement):
+#    on one device this is exactly the vmap fleet above; with >= 4 devices
+#    (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8, or a real
+#    accelerator mesh) the [scheme x seed] cells shard over the
+#    ("data", "model") mesh — the script is unchanged either way.
+from repro.fl.driver import run_fleet as run_fleet_placed
+from repro.fl.placement import ShardedPlacement, VmapPlacement
+from repro.launch.mesh import make_debug_mesh
+
+if jax.device_count() >= 4:
+    placement = ShardedPlacement(make_debug_mesh(2, 2))
+    where = f"sharded over {placement.num_devices} devices"
+else:
+    placement = VmapPlacement()
+    where = "vmapped on 1 device"
+res2 = run_fleet_placed(mlp.mlp_loss, params0, schemes, dep.gains, (xd, yd),
+                        run_cfg, evals, flat=True, seeds=(0, 1),
+                        placement=placement)
+final = res2.evals[-1][1]["acc"]
+print(f"[scheme x seed] grid {where}: final acc per cell "
+      f"{np.round(np.asarray(final), 3).tolist()}")

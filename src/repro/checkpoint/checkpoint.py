@@ -27,12 +27,23 @@ def _flatten(tree: PyTree):
 
 
 def save(path: str, tree: PyTree, meta: dict | None = None) -> None:
+    """Atomic write: both files go to temp names and are os.replace'd into
+    place, npz first and manifest last.  A kill mid-save leaves either the
+    previous complete checkpoint or the new one — never a truncated npz,
+    and never a manifest ahead of its arrays (a stale-manifest/fresh-npz
+    mix would make a resumed fleet re-run a chunk from an already-advanced
+    carry and silently drift off the uninterrupted run)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    tmp = npz_path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, npz_path)
     manifest = {"keys": sorted(flat), "meta": meta or {}}
-    with open(_manifest_path(path), "w") as f:
+    tmp_manifest = _manifest_path(path) + ".tmp"
+    with open(tmp_manifest, "w") as f:
         json.dump(manifest, f, indent=1)
+    os.replace(tmp_manifest, _manifest_path(path))
 
 
 def _manifest_path(path: str) -> str:
@@ -56,6 +67,19 @@ def restore(path: str, like: PyTree) -> PyTree:
                              f"{arr.shape} vs {np.shape(leaf)}")
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_flat(path: str) -> dict:
+    """Load a checkpoint as the flat {'/'-joined-path: array} dict.
+
+    For callers whose restore target has variable-length structure a
+    ``restore(like=...)`` template can't express ahead of time — e.g. the
+    fleet driver's metric traces / eval history / adaptive-design
+    trajectories, whose lengths depend on how many chunks had completed
+    when the sweep was preempted (fl.driver, DESIGN.md §Placement).
+    """
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    return {k: npz[k] for k in npz.files}
 
 
 def load_meta(path: str) -> dict:

@@ -742,6 +742,24 @@ def stack_schemes(schemes):
                        dropout_aware=dropout.pop(), **stacked)
 
 
+def tile_over_seeds(stacked, s_axis: int):
+    """Tile a stacked fleet's design leaves over a seed axis: [K, ...] ->
+    [K, S, ...].
+
+    Gives every (scheme, seed) cell its own copy of the design state.
+    Adaptive schemes need this so each cell can track its own channel
+    trajectory (the re-design between scan chunks is per cell); sharded
+    placements (fl.placement.ShardedPlacement) need it so EVERY scheme leaf
+    carries the grid axes and can be flattened to the [K*S] cell axis that
+    shards over the mesh.  Leaves come back as numpy (host-resident design
+    state, like ``stack_schemes``); static aux (name, redesign_fn, ...) is
+    preserved through the pytree treedef.
+    """
+    return jax.tree.map(
+        lambda a: np.repeat(np.asarray(a)[:, None], s_axis, axis=1),
+        stacked)
+
+
 def round_coeffs_fleet(stacked, h: jnp.ndarray, keys: jax.Array):
     """Vmapped coefficients for a stacked fleet.
 

@@ -1,9 +1,15 @@
-"""Logical-axis sharding constraints.
+"""Logical-axis sharding constraints + the grid shard_map primitive.
 
 Model code annotates activations with *logical* axes (e.g. ("batch", None,
 None)); the launcher binds a mesh + rules, and `constrain` lowers to
 with_sharding_constraint.  Outside a bound mesh (CPU smoke tests) it is a
 no-op, so the same model code serves both paths.
+
+``shard_vmap`` is the embarrassingly-parallel counterpart: it shards a
+flattened grid of independent cells (fleet [K x S] cells, SCA scenario
+batches) over the mesh with per-device vmap and no collectives — the
+substrate of the fleet placement layer (fl.placement, DESIGN.md
+§Placement).
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import threading
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -101,3 +108,61 @@ def shard_map(f, mesh: Mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _shmap
     return _shmap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                   check_rep=False)
+
+
+def grid_devices(mesh: Mesh, axes=("data", "model")) -> int:
+    """Number of devices a flattened grid axis shards over: the product of
+    the named mesh axis sizes."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return int(n)
+
+
+def shard_vmap(fn, mesh: Mesh, axes=("data", "model"), num_sharded: int = 1):
+    """Map ``fn`` over a leading grid axis, sharded jointly over mesh axes.
+
+    The workhorse of the fleet placement layer (fl.placement, DESIGN.md
+    §Placement): ``fn(cell_args..., bcast_args...) -> cell_out`` is a
+    per-cell program with NO collectives (cells are independent; the
+    shard_map is psum-free).  The returned callable takes the same
+    arguments where the first ``num_sharded`` carry a leading grid axis
+    [G, ...] on every array leaf and the rest are broadcast (replicated) to
+    all devices.  The grid axis is sharded over the *flattened* ``axes`` of
+    ``mesh`` — each device vmaps ``fn`` over its local block of cells.
+
+    Padding/masking rule: when G doesn't divide the device count P, the
+    grid is right-padded with copies of cell 0 up to the next multiple of P
+    (valid inputs, so the padded cells compute real — discarded — work and
+    can never poison anything with NaNs), and the padded rows are sliced
+    off the outputs.  Outputs come back with the same sharded [G] leading
+    axis.
+    """
+    spec, repl = P(tuple(axes)), P()
+    n_dev = grid_devices(mesh, axes)
+
+    def call(*args):
+        sharded, bcast = args[:num_sharded], args[num_sharded:]
+        g = jax.tree.leaves(sharded[0])[0].shape[0]
+        gp = -(-g // n_dev) * n_dev
+
+        def pad(tree):
+            return jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1], (gp - g,) + a.shape[1:])],
+                    axis=0), tree)
+
+        def local(*a):
+            s_l, b_l = a[:num_sharded], a[num_sharded:]
+            return jax.vmap(fn, in_axes=(0,) * num_sharded
+                            + (None,) * len(b_l))(*s_l, *b_l)
+
+        sm = shard_map(local, mesh,
+                       in_specs=(spec,) * num_sharded + (repl,) * len(bcast),
+                       out_specs=spec)
+        out = sm(*(sharded if gp == g else tuple(map(pad, sharded))), *bcast)
+        if gp != g:
+            out = jax.tree.map(lambda a: a[:g], out)
+        return out
+
+    return call

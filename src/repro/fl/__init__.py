@@ -1,10 +1,17 @@
 """repro.fl — the paper-scale FL runtimes.
 
 ``server``: single-run API (run_fl on the scan engine; run_fl_legacy host
-loop preserved as oracle/baseline).  ``engine``: the scan/vmap-compiled
-experiment engine — run_rounds for one (scheme, seed), run_fleet for a
-[K-scheme x S-seed] grid in one compiled program (DESIGN.md §Engine).
+loop preserved as oracle/baseline).  The fleet executor is three layers
+(DESIGN.md §Placement): ``engine`` — the chunked-scan cell program
+(run_rounds for one (scheme, seed) cell; run_fleet as the single-device
+alias); ``placement`` — where the [K-scheme x S-seed] grid runs
+(VmapPlacement on one device, ShardedPlacement over a ("data", "model")
+mesh); ``driver`` — the host chunk loop with the adaptive re-design hook
+and checkpointed resume.
 """
 from repro.fl.engine import FLResult, run_fleet, run_rounds  # noqa: F401
+from repro.fl.placement import (Placement, ShardedPlacement,  # noqa: F401
+                                VmapPlacement)
+from repro.fl import driver  # noqa: F401
 from repro.fl.server import (FLRunConfig, History, make_round_fn,  # noqa: F401
                              run_fl, run_fl_legacy)

@@ -1,0 +1,275 @@
+"""Host-driver layer of the fleet executor (DESIGN.md §Placement).
+
+Owns everything around the compiled grid chunks of a [K-scheme x S-seed]
+fleet: the chunk loop over ``engine.chunk_lengths``, the adaptive
+re-design hook between chunks, the eval cadence, the compile/exec wall
+split, and the checkpointed-resume path.  WHERE the cells run is the
+placement layer's business (``fl.placement``): the driver hands every
+chunk a [K, S]-shaped carry and gets one back, whether the cells ran as
+one vmapped program on a single device or sharded over a
+``("data", "model")`` mesh.
+
+Checkpointed resume: pass ``checkpoint_path`` and the driver persists the
+full fleet carry — params_b, fading_state, keys_b, the stacked schemes'
+design leaves, plus the metric traces / evals / ``FLResult.designs``
+accumulated so far — through ``checkpoint/checkpoint.py`` at every chunk
+boundary.  A preempted sweep rerun with ``resume=True`` fast-forwards to
+the first incomplete chunk and finishes bit-identically to an
+uninterrupted run (same carries, same key streams, same chunk schedule);
+AdaptiveSCA design trajectories survive the restart.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.power_control import stack_schemes
+from repro.fl.engine import (FADING_INIT_SALT, FLResult, _concat_traces,
+                             chunk_lengths, make_round_body)
+from repro.fl.placement import Placement, VmapPlacement
+
+PyTree = Any
+
+
+def _ckpt_file(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _carry_tree(stacked, params_b, fading_state, keys_b) -> dict:
+    carry = {"carry": {"params": params_b, "keys": keys_b},
+             "scheme": stacked}
+    if fading_state is not None:
+        carry["carry"]["fstate"] = fading_state
+    return carry
+
+
+def _array_digest(*arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _fading_desc(fading) -> str:
+    if fading is None:
+        return "none"
+    return (f"{type(fading).__name__}(family={getattr(fading, 'family', '?')}"
+            f",rho={float(getattr(fading, 'rho', 0.0))}"
+            f",p_dropout={float(getattr(fading, 'p_dropout', 0.0))})")
+
+
+def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
+                    fading) -> dict:
+    """Everything that must match for a resumed run to be bit-identical
+    to the uninterrupted one: the grid, the full run config (dynamics:
+    eta/batch_size/gmax/clipping), the per-scheme etas, the aggregation
+    path, the placement (the bitwise contract holds per placement), and
+    the physics/data — gains and dataset content hashes plus the fading
+    process descriptor — so a resume against a different world is
+    rejected, not silently mixed."""
+    return {"names": list(names), "seeds": list(seeds),
+            "num_rounds": run.num_rounds, "eval_every": run.eval_every,
+            "eta": run.eta, "batch_size": run.batch_size, "gmax": run.gmax,
+            "clip_to_gmax": bool(run.clip_to_gmax), "seed": run.seed,
+            "etas": [float(e) for e in np.asarray(etas)],
+            "flat": bool(flat), "placement": placement.describe(),
+            "gains": _array_digest(gains), "data": _array_digest(*data),
+            "fading": _fading_desc(fading)}
+
+
+def _save_fleet_state(path: str, chunks_done: int, t: int, stacked,
+                      params_b, fading_state, keys_b, metric_chunks,
+                      evals, designs, identity: dict) -> None:
+    state = _carry_tree(jax.tree.map(np.asarray, stacked),
+                        jax.tree.map(np.asarray, params_b),
+                        None if fading_state is None
+                        else np.asarray(fading_state),
+                        np.asarray(keys_b))
+    if metric_chunks:
+        state["traces"] = _concat_traces(metric_chunks)
+    if evals:
+        state["evals_t"] = np.asarray([tt for tt, _ in evals], np.int64)
+        state["evals"] = {kk: np.stack([np.asarray(ev[kk])
+                                        for _, ev in evals])
+                          for kk in evals[0][1]}
+    if designs:
+        state["designs_t"] = np.asarray([tt for tt, _ in designs], np.int64)
+        state["designs_g"] = np.stack([np.asarray(g) for _, g in designs])
+    ckpt.save(path, state, meta={
+        "chunks_done": chunks_done, "rounds_done": t, **identity})
+
+
+def _load_fleet_state(path: str, stacked, params_b, fading_state, keys_b,
+                      identity: dict, adaptive: bool):
+    meta = ckpt.load_meta(path)
+    got = {k: meta.get(k) for k in identity}
+    mismatch = {k: (got[k], identity[k]) for k in identity
+                if got[k] != identity[k]}
+    if mismatch:
+        raise ValueError(f"checkpoint {path!r} does not match this fleet "
+                         f"(saved vs running): {mismatch}")
+    state = ckpt.restore(path, _carry_tree(stacked, params_b, fading_state,
+                                           keys_b))
+    flat = ckpt.load_flat(path)
+    traces = {kk[len("traces/"):]: v for kk, v in flat.items()
+              if kk.startswith("traces/")}
+    metric_chunks = [traces] if traces else []
+    evals = []
+    if "evals_t" in flat:
+        ev_names = [kk[len("evals/"):] for kk in flat
+                    if kk.startswith("evals/")]
+        evals = [(int(tt), {nm: flat[f"evals/{nm}"][i] for nm in ev_names})
+                 for i, tt in enumerate(flat["evals_t"])]
+    designs = None
+    if adaptive:
+        designs = [(int(tt), flat["designs_g"][i])
+                   for i, tt in enumerate(flat["designs_t"])]
+    fstate = state["carry"].get("fstate") if fading_state is not None \
+        else None
+    return (int(meta["chunks_done"]), int(meta["rounds_done"]),
+            state["scheme"], state["carry"]["params"], fstate,
+            state["carry"]["keys"], metric_chunks, evals, designs)
+
+
+def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
+              data: tuple, run, eval_fn: Optional[Callable] = None, *,
+              etas=None, seeds: Optional[Sequence[int]] = None, fading=None,
+              flat: bool = True, log: bool = False,
+              placement: Optional[Placement] = None,
+              checkpoint_path: Optional[str] = None, resume: bool = False,
+              max_chunks: Optional[int] = None) -> FLResult:
+    """A [K-scheme x S-seed] experiment grid through a hardware placement.
+
+    The grid/scheme/seed/eta semantics are ``engine.run_fleet``'s (which
+    now delegates here): each (k, s) cell consumes the exact key/fading
+    streams of a standalone run with that seed.  New driver-level knobs:
+
+    placement        fl.placement.VmapPlacement() (default — one device,
+                     bit-identical to the pre-refactor engine) or
+                     ShardedPlacement(mesh) to shard the flattened cell
+                     grid over a mesh.
+    checkpoint_path  persist the fleet carry (params_b, fading_state,
+                     keys_b, scheme design leaves, traces/evals/designs)
+                     at every chunk boundary via checkpoint/checkpoint.py.
+    resume           fast-forward from checkpoint_path if it exists: the
+                     completed chunks are skipped and the final FLResult
+                     is bit-identical to an uninterrupted run's.
+    max_chunks       stop (with a checkpoint saved) after this many chunks
+                     this invocation — the preemption hook sweeps and the
+                     resume tests use.
+
+    Adaptive schemes (``power_control.AdaptiveSCA``) re-design BETWEEN
+    chunks from the live fading state, whatever the placement: the state
+    gathers to host at the chunk boundary, the batched SCA solver re-solves
+    per cell, and the new [K, S] design leaves ship with the next chunk.
+    """
+    t0 = time.time()
+    placement = placement if placement is not None else VmapPlacement()
+    stacked = schemes if not isinstance(schemes, (list, tuple)) \
+        else stack_schemes(schemes)
+    names = tuple(getattr(stacked, "names", (stacked.name,)))
+    k = len(names)
+    seeds = tuple(int(s) for s in (seeds if seeds is not None
+                                   else (run.seed,)))
+    s_axis = len(seeds)
+    if etas is None:
+        etas = np.full(k, run.eta, np.float64)
+    etas = np.asarray(etas, np.float64)
+    if etas.shape != (k,):
+        raise ValueError(f"etas shape {etas.shape} != ({k},)")
+
+    redesign = getattr(stacked, "redesign_fn", None)
+    adaptive = redesign is not None and fading is not None
+    stacked = placement.prepare_schemes(stacked, s_axis, adaptive)
+
+    round_body = make_round_body(loss_fn, gains, run, fading=fading,
+                                 flat=flat)
+    chunk = placement.build_chunk(round_body, adaptive)
+
+    data = tuple(jnp.asarray(a) for a in data)
+    params_b = jax.tree.map(
+        lambda a: jnp.tile(jnp.asarray(a)[None, None],
+                           (k, s_axis) + (1,) * jnp.ndim(a)), params)
+    keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds])      # [S, 2]
+    keys_b = jnp.tile(keys0[None], (k, 1, 1))                      # [K, S, 2]
+    fading_state = None
+    if fading is not None:
+        init_keys = jax.vmap(
+            lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
+        state_s = fading.init_batch(init_keys)                     # [S, N]
+        fading_state = jnp.tile(state_s[None], (k,) + (1,) * state_s.ndim)
+
+    eval_b = None
+    if eval_fn is not None:
+        eval_b = jax.jit(jax.vmap(jax.vmap(eval_fn)))
+
+    designs = [(0, np.asarray(stacked.gamma))] if adaptive else None
+    evals, metric_chunks, t = [], [], 0
+    lengths = chunk_lengths(run.num_rounds, run.eval_every,
+                            eval_fn is not None or adaptive)
+
+    identity = None
+    if checkpoint_path is not None:
+        identity = _fleet_identity(names, seeds, run, etas, flat, placement,
+                                   gains, data, fading)
+    start_chunk = 0
+    if checkpoint_path and resume \
+            and os.path.exists(_ckpt_file(checkpoint_path)):
+        (start_chunk, t, stacked, params_b, fading_state, keys_b,
+         metric_chunks, evals, designs) = _load_fleet_state(
+            checkpoint_path, stacked, params_b, fading_state, keys_b,
+            identity, adaptive)
+        if log:
+            print(f"# resumed fleet from {checkpoint_path} at chunk "
+                  f"{start_chunk} (round {t})")
+
+    wall_compile, first = 0.0, True
+    for ci, length in enumerate(lengths):
+        if ci < start_chunk:
+            continue
+        params_b, fading_state, keys_b, metrics = chunk(
+            stacked, etas, params_b, fading_state, keys_b, data,
+            length=length)
+        if first:
+            jax.block_until_ready(params_b)
+            wall_compile = time.time() - t0
+            first = False
+        metric_chunks.append(metrics)
+        t += length
+        if adaptive and t < run.num_rounds:
+            # gather the live state to host first: the re-design solve must
+            # see one replicated array, not a mesh-sharded one, so the new
+            # design is bitwise the same whatever placement ran the chunk
+            stacked = redesign(stacked, fading, np.asarray(fading_state))
+            designs.append((t, np.asarray(stacked.gamma)))
+        if eval_b is not None:
+            ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
+            evals.append((t - 1, ev))
+            if log:
+                lead = next(iter(ev))
+                print({"round": t - 1,
+                       **{n: round(float(ev[lead][i, 0]), 4)
+                          for i, n in enumerate(names)}})
+        if checkpoint_path is not None:
+            _save_fleet_state(checkpoint_path, ci + 1, t, stacked, params_b,
+                              fading_state, keys_b, metric_chunks, evals,
+                              designs, identity)
+        if max_chunks is not None and ci + 1 - start_chunk >= max_chunks \
+                and ci + 1 < len(lengths):
+            break            # preempted on purpose; resume=True continues
+
+    wall = time.time() - t0
+    return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
+                    evals=evals, names=names, seeds=seeds, wall=wall,
+                    wall_compile=wall_compile, wall_exec=wall - wall_compile,
+                    fading_state=fading_state, designs=designs)

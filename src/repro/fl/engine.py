@@ -14,10 +14,16 @@ module folds the FL round loop into XLA:
   three chunk lengths ever compile).  Bit-identical to the legacy Python
   loop on the default path: the key stream, fading draws and update math
   are the same ops in the same order.
-* ``run_fleet`` — a [K-scheme x S-seed] grid in ONE compiled program:
-  schemes are stacked into a pytree (``power_control.stack_schemes``) and
-  the scanned round body is vmapped over (scheme, seed) cells.  Each cell
-  reproduces the corresponding single run run-for-run.
+* ``run_fleet`` — a [K-scheme x S-seed] grid as one compiled program per
+  chunk: schemes are stacked into a pytree (``power_control
+  .stack_schemes``) and the scanned round body runs over (scheme, seed)
+  cells.  Each cell reproduces the corresponding single run run-for-run.
+  The grid machinery lives one layer up: ``fl.placement`` decides WHERE
+  the cells run (vmap on one device — the default, bit-identical to the
+  pre-placement engine — or shard_map over a ("data", "model") mesh) and
+  ``fl.driver`` owns the chunk loop, adaptive re-design hook, and
+  checkpointed resume; ``run_fleet`` here is the single-device alias that
+  delegates to them (DESIGN.md §Placement).
 
 Per-round metric traces (grad-norm mean, active devices, noise scale) come
 back as stacked arrays straight from the scan — no per-round host sync.
@@ -42,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ota
-from repro.core.power_control import PowerControl, stack_schemes
+from repro.core.power_control import PowerControl
 from repro.optim.optimizers import clip_by_global_norm
 
 PyTree = Any
@@ -63,7 +69,12 @@ class FLResult:
                   cadence (empty when no eval_fn was given)
     names         scheme names, length K (single runs: (scheme.name,))
     seeds         seeds swept, length S
-    wall          wall-clock seconds, compile included
+    wall          total wall-clock seconds (= wall_compile + wall_exec)
+    wall_compile  seconds through the end of the FIRST chunk call — setup
+                  plus the dominant XLA compile; benchmark speedups quote
+                  it separately so compile never inflates throughput
+    wall_exec     seconds after the first chunk — steady-state execution
+                  (later chunk lengths may still add smaller compiles)
     fading_state  final FadingProcess state (None on the i.i.d. path)
     designs       adaptive-scheme design trace: [(round, gamma [K, S, N])]
                   with entry (t, g) meaning design g is in effect from
@@ -75,6 +86,8 @@ class FLResult:
     names: tuple
     seeds: tuple
     wall: float
+    wall_compile: float = 0.0
+    wall_exec: float = 0.0
     fading_state: Any = None
     designs: Optional[list] = None
 
@@ -219,10 +232,15 @@ def run_rounds(loss_fn: Callable, params: PyTree, scheme: PowerControl,
         fading_state = fading.init(jax.random.fold_in(key, FADING_INIT_SALT))
 
     evals, metric_chunks, t = [], [], 0
+    wall_compile, first = 0.0, True
     for length in chunk_lengths(run.num_rounds, run.eval_every,
                                 eval_fn is not None):
         params, fading_state, key, metrics = chunk(
             params, fading_state, key, data, length=length)
+        if first:
+            jax.block_until_ready(params)
+            wall_compile = time.time() - t0
+            first = False
         metric_chunks.append(metrics)
         t += length
         if eval_fn is not None:
@@ -231,18 +249,27 @@ def run_rounds(loss_fn: Callable, params: PyTree, scheme: PowerControl,
             if log:
                 print({"round": t - 1, "scheme": scheme.name,
                        **{k: round(v, 4) for k, v in ev.items()}})
+    wall = time.time() - t0
     return FLResult(params=params, traces=_concat_traces(metric_chunks),
                     evals=evals, names=(scheme.name,), seeds=(run.seed,),
-                    wall=time.time() - t0, fading_state=fading_state)
+                    wall=wall, wall_compile=wall_compile,
+                    wall_exec=wall - wall_compile,
+                    fading_state=fading_state)
 
 
 def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
               data: tuple, run, eval_fn: Optional[Callable] = None, *,
               etas=None, seeds: Optional[Sequence[int]] = None, fading=None,
-              flat: bool = True, log: bool = False) -> FLResult:
+              flat: bool = True, log: bool = False, **driver_kw) -> FLResult:
     """A [K-scheme x S-seed] experiment grid as ONE compiled scan program.
 
-    ``schemes``: a list of PowerControl objects (stacked here via
+    The single-device alias of the layered executor: delegates to
+    ``fl.driver.run_fleet`` on the default ``VmapPlacement`` (bit-identical
+    to the pre-placement engine); extra keyword args — ``placement``,
+    ``checkpoint_path``, ``resume``, ``max_chunks`` — pass through to the
+    driver (DESIGN.md §Placement).
+
+    ``schemes``: a list of PowerControl objects (stacked via
     ``stack_schemes`` — heterogeneous mixes dispatch through the
     SchemeBatch union) or an already-stacked fleet.  ``etas``: per-scheme
     step sizes [K] (default run.eta everywhere).  ``seeds``: the seed axis
@@ -263,82 +290,7 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     Without a fading process (static CSI) the redesign hook is a no-op and
     the run is identical to the plain ``sca`` scheme's.
     """
-    t0 = time.time()
-    stacked = schemes if not isinstance(schemes, (list, tuple)) \
-        else stack_schemes(schemes)
-    names = tuple(getattr(stacked, "names", (stacked.name,)))
-    k = len(names)
-    seeds = tuple(int(s) for s in (seeds if seeds is not None
-                                   else (run.seed,)))
-    s_axis = len(seeds)
-    if etas is None:
-        etas = np.full(k, run.eta, np.float64)
-    etas = np.asarray(etas, np.float64)
-    if etas.shape != (k,):
-        raise ValueError(f"etas shape {etas.shape} != ({k},)")
-
-    redesign = getattr(stacked, "redesign_fn", None)
-    adaptive = redesign is not None and fading is not None
-    if adaptive:
-        # every (scheme, seed) cell owns its design: tile the design state
-        # over the seed axis and vmap the scheme at both grid levels
-        stacked = jax.tree.map(
-            lambda a: np.repeat(np.asarray(a)[:, None], s_axis, axis=1),
-            stacked)
-
-    round_body = make_round_body(loss_fn, gains, run, fading=fading,
-                                 flat=flat)
-
-    def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
-                    length):
-        def cell(scheme, eta, params, fstate, key):
-            return _scan_chunk(round_body, scheme, eta, params, fstate,
-                               key, data, length)
-        per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None, None,
-                                           0, 0, 0))
-        per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
-        return per_cell(stacked, etas, params_b, fstate_b, keys_b)
-
-    chunk = jax.jit(fleet_chunk, static_argnames=("length",))
-
-    data = tuple(jnp.asarray(a) for a in data)
-    params_b = jax.tree.map(
-        lambda a: jnp.tile(jnp.asarray(a)[None, None],
-                           (k, s_axis) + (1,) * jnp.ndim(a)), params)
-    keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds])      # [S, 2]
-    keys_b = jnp.tile(keys0[None], (k, 1, 1))                      # [K, S, 2]
-    fading_state = None
-    if fading is not None:
-        init_keys = jax.vmap(
-            lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
-        state_s = fading.init_batch(init_keys)                     # [S, N]
-        fading_state = jnp.tile(state_s[None], (k,) + (1,) * state_s.ndim)
-
-    eval_b = None
-    if eval_fn is not None:
-        eval_b = jax.jit(jax.vmap(jax.vmap(eval_fn)))
-
-    designs = [(0, np.asarray(stacked.gamma))] if adaptive else None
-    evals, metric_chunks, t = [], [], 0
-    for length in chunk_lengths(run.num_rounds, run.eval_every,
-                                eval_fn is not None or adaptive):
-        params_b, fading_state, keys_b, metrics = chunk(
-            stacked, etas, params_b, fading_state, keys_b, data,
-            length=length)
-        metric_chunks.append(metrics)
-        t += length
-        if adaptive and t < run.num_rounds:
-            stacked = redesign(stacked, fading, fading_state)
-            designs.append((t, np.asarray(stacked.gamma)))
-        if eval_b is not None:
-            ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
-            evals.append((t - 1, ev))
-            if log:
-                lead = next(iter(ev))
-                print({"round": t - 1,
-                       **{n: round(float(ev[lead][i, 0]), 4)
-                          for i, n in enumerate(names)}})
-    return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
-                    evals=evals, names=names, seeds=seeds,
-                    wall=time.time() - t0, fading_state=fading_state,
-                    designs=designs)
+    from repro.fl import driver  # deferred: driver imports this module
+    return driver.run_fleet(loss_fn, params, schemes, gains, data, run,
+                            eval_fn, etas=etas, seeds=seeds, fading=fading,
+                            flat=flat, log=log, **driver_kw)

@@ -1,0 +1,184 @@
+"""Placement layer of the fleet executor (DESIGN.md §Placement).
+
+The fleet is three layers:
+
+* **cell program** (``fl.engine``): the chunked-scan single-cell runtime —
+  ``make_round_body`` + ``_scan_chunk`` — pure and placement-agnostic.
+* **placement** (this module): maps the [K-scheme x S-seed] grid onto
+  hardware.  ``VmapPlacement`` is the single-device path — the exact
+  vmap-over-cells program the engine has always compiled, bit-identical.
+  ``ShardedPlacement`` flattens the grid to a [K*S] cell axis and shards
+  it over a ``("data", "model")`` mesh via ``distributed.shard_vmap``:
+  cells are independent so the shard_map is psum-free, the grid is padded
+  with copies of cell 0 when K*S doesn't divide the device count (padded
+  outputs sliced off), and traces/evals/designs gather to host at chunk
+  boundaries.
+* **host driver** (``fl.driver``): the chunk loop, adaptive re-design
+  hook, and checkpointed resume — consumes either placement through the
+  same two-method interface.
+
+A placement exposes:
+
+    prepare_schemes(stacked, s_axis, adaptive) -> stacked'
+        layout the stacked schemes' design leaves for this placement
+        (vmap broadcasts non-adaptive designs over seeds; sharding tiles
+        every leaf to the full [K, S] grid so it can flatten to cells).
+    build_chunk(round_body, adaptive) -> chunk
+        chunk(stacked, etas, params_b, fstate_b, keys_b, data, length)
+        -> (params_b, fstate_b, keys_b, metrics), everything with leading
+        [K, S] grid axes either way — the driver never knows where the
+        cells ran.
+    map_batch(fn, batch_tree) -> out_tree
+        generic per-row map over a leading [B] batch axis — how
+        ``solvers.solve_batch`` shards thousand-scenario SCA design
+        batches over the same mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import distributed
+from repro.core.power_control import tile_over_seeds
+from repro.fl.engine import _scan_chunk
+from repro.launch.mesh import grid_axes
+
+PyTree = Any
+
+
+class Placement:
+    """Interface marker; see module docstring for the contract."""
+
+    def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
+        raise NotImplementedError
+
+    def build_chunk(self, round_body, adaptive: bool):
+        raise NotImplementedError
+
+    def compile_batch(self, fn):
+        """Compiled per-row map over a leading [B] axis.  Callers that
+        invoke the result repeatedly should hold on to it (or cache keyed
+        on this placement — both placements hash stably), so the jit trace
+        cache survives across calls."""
+        raise NotImplementedError
+
+    def map_batch(self, fn, batch_tree):
+        return self.compile_batch(fn)(batch_tree)
+
+    def describe(self) -> str:
+        """Stable identity string, recorded in fleet checkpoints so a
+        resume on a different placement is rejected (the bitwise-resume
+        contract holds per placement)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class VmapPlacement(Placement):
+    """The single-device grid: vmap over (scheme, seed) cells.
+
+    This is byte-for-byte the fleet program ``engine.run_fleet`` has
+    always compiled — non-adaptive schemes broadcast over the seed axis
+    (in_axes None), adaptive schemes tile per cell — so the refactor keeps
+    the default path run-for-run identical.
+    """
+
+    def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
+        # every (scheme, seed) cell owns its design: tile the design state
+        # over the seed axis and vmap the scheme at both grid levels
+        return tile_over_seeds(stacked, s_axis) if adaptive else stacked
+
+    def build_chunk(self, round_body, adaptive: bool):
+        def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                        length):
+            def cell(scheme, eta, params, fstate, key):
+                return _scan_chunk(round_body, scheme, eta, params, fstate,
+                                   key, data, length)
+            per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None,
+                                               None, 0, 0, 0))
+            per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
+            return per_cell(stacked, etas, params_b, fstate_b, keys_b)
+
+        return jax.jit(fleet_chunk, static_argnames=("length",))
+
+    def compile_batch(self, fn):
+        return jax.jit(jax.vmap(fn))
+
+    def describe(self) -> str:
+        return "vmap"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlacement(Placement):
+    """Shard the flattened [K*S] cell axis over mesh axes.
+
+    ``mesh`` is any jax Mesh (``launch.mesh.make_debug_mesh(2, 2)`` for
+    the forced-8-CPU-device CI path, ``make_production_mesh()`` on real
+    hardware); ``axes`` defaults to every mesh axis — fleet cells are
+    independent single-device programs, so "data" and "model" both serve
+    as cell slots.  Each device scans its local block of cells; results
+    come back as global arrays with the grid axes restored, so the host
+    driver (and its checkpoint format) is identical to the vmap path.
+    """
+    mesh: Any
+    axes: tuple = None  # default: every axis of ``mesh``
+
+    def __post_init__(self):
+        if self.axes is None:
+            object.__setattr__(self, "axes", grid_axes(self.mesh))
+
+    @property
+    def num_devices(self) -> int:
+        return distributed.grid_devices(self.mesh, self.axes)
+
+    def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
+        # sharding flattens the grid to cells, so every design leaf must
+        # carry the full [K, S] axes — adaptive or not
+        return tile_over_seeds(stacked, s_axis)
+
+    def build_chunk(self, round_body, adaptive: bool):
+        compiled = {}
+
+        def chunk(stacked, etas, params_b, fstate_b, keys_b, data, length):
+            k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
+            fn = compiled.get((length, k, s))
+            if fn is None:
+                fn = compiled[(length, k, s)] = self._compile(
+                    round_body, length, k, s)
+            return fn(stacked, etas, params_b, fstate_b, keys_b, data)
+
+        return chunk
+
+    def _compile(self, round_body, length: int, k: int, s: int):
+        def cell(scheme, eta, params, fstate, key, data):
+            return _scan_chunk(round_body, scheme, eta, params, fstate, key,
+                               data, length)
+
+        grid_call = distributed.shard_vmap(cell, self.mesh, self.axes,
+                                           num_sharded=5)
+
+        def run(stacked, etas, params_b, fstate_b, keys_b, data):
+            def flat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k * s,) + a.shape[2:]), tree)
+
+            def unflat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k, s) + a.shape[1:]), tree)
+
+            etas_f = jnp.reshape(
+                jnp.broadcast_to(jnp.asarray(etas)[:, None], (k, s)), (k * s,))
+            out = grid_call(flat(stacked), etas_f, flat(params_b),
+                            flat(fstate_b), flat(keys_b), data)
+            return unflat(out)
+
+        return jax.jit(run)
+
+    def compile_batch(self, fn):
+        return jax.jit(distributed.shard_vmap(fn, self.mesh, self.axes))
+
+    def describe(self) -> str:
+        shape = ",".join(f"{a}={self.mesh.shape[a]}" for a in self.axes)
+        return f"sharded[{shape}]"

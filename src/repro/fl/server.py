@@ -19,8 +19,10 @@ The wireless side is scenario-pluggable (DESIGN.md §Scenarios): by default
 rounds draw i.i.d. Rayleigh fading from ``gains``; pass a
 scenarios.FadingProcess to run any registered scenario family (Rician,
 Nakagami, Gauss-Markov correlated rounds, device dropout) through the same
-compiled round body.  For whole scheme x seed grids in one compiled
-program, use ``fl.engine.run_fleet``.
+compiled round body.  For whole scheme x seed grids, use the layered fleet
+executor (DESIGN.md §Placement): ``fl.engine.run_fleet`` on one device, or
+``fl.driver.run_fleet`` with a ``fl.placement.ShardedPlacement`` to shard
+the grid over a mesh with checkpointed resume.
 """
 from __future__ import annotations
 

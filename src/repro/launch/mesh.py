@@ -37,3 +37,11 @@ def num_clients(mesh) -> int:
 
 def batch_axes(mesh) -> tuple:
     return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def grid_axes(mesh) -> tuple:
+    """Mesh axes a flattened sweep grid shards over (fl.placement,
+    DESIGN.md §Placement).  Fleet cells are independent programs, so the
+    whole mesh — every axis, pods included — serves as one flat pool of
+    cell slots."""
+    return tuple(mesh.axis_names)

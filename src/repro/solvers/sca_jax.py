@@ -331,6 +331,15 @@ def _solve_batch_jit(prm_b, cfg):
     return jax.vmap(lambda p: _solve_one(p, None, cfg))(prm_b)
 
 
+@functools.lru_cache(maxsize=None)
+def _placed_batch_solver(placement, cfg):
+    """Compiled batch solve on a placement, cached per (placement, cfg) so
+    repeated placed solves reuse the jit trace exactly like the default
+    ``_solve_batch_jit`` path (a fresh closure per call would retrace —
+    and recompile the whole SSCA scan — every time)."""
+    return placement.compile_batch(lambda p: _solve_one(p, None, cfg))
+
+
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
@@ -362,7 +371,8 @@ def _as_f64(pj: SolverParams) -> SolverParams:
     return jax.tree.map(lambda a: jnp.asarray(a, jnp.float64), pj)
 
 
-def solve_batch(prms, cfg: SolverConfig = DEFAULT_CONFIG) -> BatchResult:
+def solve_batch(prms, cfg: SolverConfig = DEFAULT_CONFIG,
+                placement=None) -> BatchResult:
     """Design powers for a batch of scenarios in ONE compiled program.
 
     ``prms``: a sequence of ``OTAParams`` (stacked here), or an already
@@ -370,10 +380,20 @@ def solve_batch(prms, cfg: SolverConfig = DEFAULT_CONFIG) -> BatchResult:
     ``theory_jax.stack_params`` or built on device by ``AdaptiveSCA``).
     All rows share the fading family and device count; gains / noise /
     dropout / family parameters / objective weights vary per row.
+
+    ``placement``: optional ``fl.placement`` object mapping the batch axis
+    onto hardware — ``ShardedPlacement(mesh)`` shards a thousand-scenario
+    design batch over the ``("data", "model")`` mesh exactly like the
+    fleet grid shards (rows are independent; the shard_map is psum-free,
+    with the same pad-with-row-0 rule when B doesn't divide the device
+    count).  ``None`` (default) keeps the single-device vmap program.
     """
     with enable_x64():
         pj = _as_f64(prms if isinstance(prms, SolverParams) else stack(prms))
-        out = _solve_batch_jit(pj, cfg)
+        if placement is None:
+            out = _solve_batch_jit(pj, cfg)
+        else:
+            out = _placed_batch_solver(placement, cfg)(pj)
         out = {k: np.asarray(v) for k, v in out.items()}
     return BatchResult(gamma=out["gamma"], p=out["p"], alpha=out["alpha"],
                        objective=out["objective"], history=out["history"],

@@ -1,0 +1,353 @@
+"""Fleet placement layer + host driver (DESIGN.md §Placement).
+
+Parity contract:
+  * ShardedPlacement on a ("data", "model") debug mesh reproduces the
+    single-device run_fleet per [K, S] cell: every key-stream-derived
+    quantity — active devices, noise scales, dropout patterns, eval
+    cadence — BITWISE, and norm-derived float traces / params to ~1 ulp
+    (XLA lowers each cell's large reductions slightly differently per
+    local block size, so e.g. the global-norm clip can round differently;
+    everything driven purely by per-cell keys and elementwise math is
+    exact).
+  * checkpoint-resume is BITWISE against the uninterrupted run *on the
+    same placement* — same carries, key streams, chunk schedule, same
+    compiled programs — including AdaptiveSCA design trajectories across
+    the restart.
+  * solvers.solve_batch sharded over the mesh matches the vmap batch to
+    <= 1e-7 relative.
+
+The sharded tests need >= 4 host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8; the CI
+``sharded-smoke`` job forces them) and skip otherwise; the vmap-placement
+resume tests run everywhere.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import distributed
+from repro.core import channel, power_control as pcm, scenarios as scn
+from repro.data import partition, synthetic
+from repro.fl import driver, engine as eng
+from repro.fl.placement import ShardedPlacement, VmapPlacement
+from repro.fl.server import FLRunConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.models import mlp
+from repro.models.param import init_params
+from tests.helpers import make_prm
+
+HIDDEN = 32
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def world():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=0))
+    x, y, xt, yt = synthetic.mnist_like(40, seed=0)
+    shards = partition.partition_by_label(x, y, 10, seed=0)
+    data = partition.stack_shards(shards)
+    prm = make_prm(dep.gains, d=10000)
+    params0 = init_params(mlp.mlp_defs(hidden=HIDDEN), jax.random.PRNGKey(0))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    ev = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+    return dep, prm, data, params0, ev
+
+
+@pytest.fixture(scope="module")
+def markov_world():
+    sc = scn.get_scenario("disk_markov")
+    dep = scn.realize(sc)
+    prm = scn.make_ota_params(dep, d=10000, gmax=10.0, eta=0.05,
+                              kappa_sq=4.0)
+    fp = scn.make_fading_process(dep, sc.dynamics)
+    x, y, _, _ = synthetic.mnist_like(40, seed=0)
+    data = partition.stack_shards(partition.partition_by_label(x, y, 10,
+                                                               seed=0))
+    params0 = init_params(mlp.mlp_defs(hidden=HIDDEN), jax.random.PRNGKey(0))
+    return dep, prm, fp, data, params0
+
+
+def _params_equal(a, b):
+    return all(bool(np.array_equal(np.asarray(x), np.asarray(y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _params_maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# traces that are pure functions of the per-cell key streams and the design
+# state must agree bitwise across placements; traces derived from large
+# float reductions (the global-norm clip) may legitimately differ at ~1 ulp
+_EXACT_TRACES = ("active_devices", "noise_scale")
+
+
+def _results_bitwise_histories(res_a, res_b):
+    """traces + evals + designs bitwise between two FLResults (same
+    placement on both sides: identical compiled programs)."""
+    _compare_histories(res_a, res_b, exact=True)
+
+
+def _compare_histories(res_a, res_b, exact: bool):
+    assert set(res_a.traces) == set(res_b.traces)
+    for k in res_a.traces:
+        if exact or k in _EXACT_TRACES:
+            assert np.array_equal(res_a.traces[k], res_b.traces[k]), k
+        else:
+            np.testing.assert_allclose(res_a.traces[k], res_b.traces[k],
+                                       rtol=1e-6, atol=1e-6, err_msg=k)
+    assert [t for t, _ in res_a.evals] == [t for t, _ in res_b.evals]
+    for (_, ea), (_, eb) in zip(res_a.evals, res_b.evals):
+        for k in ea:
+            if exact:
+                assert np.array_equal(np.asarray(ea[k]),
+                                      np.asarray(eb[k])), k
+            else:
+                np.testing.assert_allclose(np.asarray(ea[k]),
+                                           np.asarray(eb[k]), rtol=1e-5,
+                                           atol=3e-3, err_msg=k)
+    if res_a.designs is not None or res_b.designs is not None:
+        assert len(res_a.designs) == len(res_b.designs)
+        for (ta, ga), (tb, gb) in zip(res_a.designs, res_b.designs):
+            assert ta == tb
+            if exact:
+                assert np.array_equal(np.asarray(ga), np.asarray(gb))
+            else:
+                np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                           rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# chunk_lengths edge cases (cell-program layer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e", [(3, 10),    # num_rounds < eval_every
+                                 (5, 1),     # eval_every == 1
+                                 (1, 1), (1, 5),  # num_rounds == 1
+                                 (2, 10)])
+def test_chunk_lengths_edge_cases(t, e):
+    legacy_evals = [r for r in range(t) if r % e == 0 or r == t - 1]
+    lengths = eng.chunk_lengths(t, e, with_eval=True)
+    assert sum(lengths) == t
+    assert all(ln >= 1 for ln in lengths)
+    assert list(np.cumsum(lengths) - 1) == legacy_evals
+    assert len(set(lengths)) <= 3
+    assert eng.chunk_lengths(t, e, with_eval=False) == [t]
+    assert eng.chunk_lengths(0, e, with_eval=True) == []
+
+
+# ---------------------------------------------------------------------------
+# shard_vmap primitive
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_shard_vmap_padding_and_masking():
+    """G that doesn't divide the device pool: padded with copies of row 0,
+    padded outputs sliced off, per-row results equal the plain vmap."""
+    mesh = make_debug_mesh(2, 2)
+    xs = jnp.arange(7 * 3, dtype=jnp.float32).reshape(7, 3)   # G=7 over P=4
+    bias = jnp.float32(2.0)
+
+    def f(x, b):
+        return {"out": x * x + b, "norm": jnp.sum(x)}
+
+    got = jax.jit(distributed.shard_vmap(f, mesh, num_sharded=1))(xs, bias)
+    want = jax.vmap(f, in_axes=(0, None))(xs, bias)
+    assert got["out"].shape == (7, 3)
+    np.testing.assert_array_equal(np.asarray(got["out"]),
+                                  np.asarray(want["out"]))
+    np.testing.assert_array_equal(np.asarray(got["norm"]),
+                                  np.asarray(want["norm"]))
+
+
+@needs_mesh
+def test_grid_devices():
+    mesh = make_debug_mesh(2, 2)
+    assert distributed.grid_devices(mesh, ("data", "model")) == 4
+    assert distributed.grid_devices(mesh, ("data",)) == 2
+    placement = ShardedPlacement(mesh)
+    assert placement.num_devices == 4
+    assert placement.axes == ("data", "model")   # launch.mesh.grid_axes
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet vs single-device vmap fleet
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_sharded_fleet_matches_vmap_bitwise_traces(world):
+    """[3 schemes x 2 seeds] heterogeneous fleet on a 2x2 mesh (grid 6 pads
+    to 8): key-stream traces bitwise per cell vs the single-device fleet,
+    norm-derived traces/params to float rounding."""
+    dep, prm, data, params0, ev = world
+    names = ["ideal", "sca", "vanilla"]
+    schemes = [pcm.make_power_control(n, dep, prm) for n in names]
+    run = FLRunConfig(eta=0.05, num_rounds=9, eval_every=4)
+    kw = dict(seeds=(0, 3), flat=False)
+    res_v = eng.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                          run, ev, **kw)
+    res_s = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, ev, **kw,
+                             placement=ShardedPlacement(make_debug_mesh(2, 2)))
+    assert res_s.names == res_v.names == tuple(names)
+    assert res_s.traces["active_devices"].shape == (3, 2, run.num_rounds)
+    _compare_histories(res_v, res_s, exact=False)
+    assert _params_maxdiff(res_v.params, res_s.params) < 1e-6
+
+
+@needs_mesh
+def test_sharded_fleet_stateful_scenario(markov_world):
+    """Gauss-Markov fading state shards with the cells; key-stream traces
+    (dropout/active patterns, noise scales) match the vmap fleet bitwise."""
+    dep, prm, fp, data, params0 = markov_world
+    schemes = [pcm.make_power_control(n, dep, prm)
+               for n in ("sca", "zero_bias")]
+    run = FLRunConfig(eta=0.05, num_rounds=6, eval_every=3)
+    kw = dict(seeds=(0, 1), fading=fp, flat=False)
+    res_v = eng.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                          run, None, **kw)
+    res_s = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, None, **kw,
+                             placement=ShardedPlacement(make_debug_mesh(2, 2)))
+    _compare_histories(res_v, res_s, exact=False)
+    np.testing.assert_allclose(np.asarray(res_v.fading_state),
+                               np.asarray(res_s.fading_state), rtol=1e-5,
+                               atol=1e-6)
+    assert _params_maxdiff(res_v.params, res_s.params) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointed resume (host-driver layer)
+# ---------------------------------------------------------------------------
+
+def test_resume_bitwise_vmap_placement(world, tmp_path):
+    """Kill after chunk 1, resume: final params/traces/evals bitwise equal
+    the uninterrupted run (single-device placement, runs everywhere)."""
+    dep, prm, data, params0, ev = world
+    schemes = [pcm.make_power_control(n, dep, prm) for n in ("sca", "ideal")]
+    run = FLRunConfig(eta=0.05, num_rounds=9, eval_every=3)
+    args = (mlp.mlp_loss, params0, schemes, dep.gains, data, run, ev)
+    path = os.path.join(tmp_path, "fleet")
+    res_full = driver.run_fleet(*args, seeds=(0, 2), flat=False)
+    res_part = driver.run_fleet(*args, seeds=(0, 2), flat=False,
+                                checkpoint_path=path, max_chunks=1)
+    # genuinely interrupted: only the first chunk's rounds ran
+    assert res_part.traces["active_devices"].shape[-1] < run.num_rounds
+    res_res = driver.run_fleet(*args, seeds=(0, 2), flat=False,
+                               checkpoint_path=path, resume=True)
+    assert _params_equal(res_full.params, res_res.params)
+    _results_bitwise_histories(res_full, res_res)
+
+
+def test_resume_checkpoint_mismatch_raises(world, tmp_path):
+    dep, prm, data, params0, ev = world
+    schemes = [pcm.make_power_control("ideal", dep, prm)]
+    run = FLRunConfig(eta=0.05, num_rounds=4, eval_every=2)
+    path = os.path.join(tmp_path, "fleet")
+    driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data, run,
+                     ev, flat=False, checkpoint_path=path, max_chunks=1)
+    other = FLRunConfig(eta=0.05, num_rounds=8, eval_every=2)
+    with pytest.raises(ValueError, match="does not match"):
+        driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                         other, ev, flat=False, checkpoint_path=path,
+                         resume=True)
+    # the whole run configuration is part of the checkpoint identity, not
+    # just the grid shape: dynamics (batch_size/eta), aggregation path,
+    # and per-scheme etas all reject a mismatched resume
+    mb = FLRunConfig(eta=0.05, num_rounds=4, eval_every=2, batch_size=16)
+    with pytest.raises(ValueError, match="batch_size"):
+        driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                         mb, ev, flat=False, checkpoint_path=path,
+                         resume=True)
+    with pytest.raises(ValueError, match="flat"):
+        driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                         run, ev, flat=True, checkpoint_path=path,
+                         resume=True)
+    with pytest.raises(ValueError, match="etas"):
+        driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                         run, ev, flat=False, etas=[0.01],
+                         checkpoint_path=path, resume=True)
+
+
+def test_resume_completed_run_is_noop(world, tmp_path):
+    """Resuming a checkpoint of a finished sweep re-runs nothing and
+    reassembles the same result."""
+    dep, prm, data, params0, ev = world
+    schemes = [pcm.make_power_control("ideal", dep, prm)]
+    run = FLRunConfig(eta=0.05, num_rounds=5, eval_every=2)
+    path = os.path.join(tmp_path, "fleet")
+    args = (mlp.mlp_loss, params0, schemes, dep.gains, data, run, ev)
+    res_full = driver.run_fleet(*args, flat=False, checkpoint_path=path)
+    res_res = driver.run_fleet(*args, flat=False, checkpoint_path=path,
+                               resume=True)
+    assert _params_equal(res_full.params, res_res.params)
+    _results_bitwise_histories(res_full, res_res)
+
+
+@needs_mesh
+def test_sharded_adaptive_resume_bitwise(markov_world, tmp_path):
+    """The acceptance gate: adaptive_sca fleet SHARDED over the debug mesh,
+    killed after chunk 1 and resumed — final params and the re-design
+    trajectory (FLResult.designs) bitwise equal the uninterrupted sharded
+    run; traces/evals/designs also bitwise vs the single-device fleet."""
+    dep, prm, fp, data, params0 = markov_world
+    pc = pcm.make_power_control("adaptive_sca", dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=6, eval_every=2)
+    pl = ShardedPlacement(make_debug_mesh(2, 2))
+    args = (mlp.mlp_loss, params0, [pc], dep.gains, data, run)
+    kw = dict(fading=fp, flat=False, seeds=(0, 1))
+    path = os.path.join(tmp_path, "fleet")
+
+    res_full = driver.run_fleet(*args, **kw, placement=pl)
+    assert len(res_full.designs) >= 3          # re-designed between chunks
+    res_part = driver.run_fleet(*args, **kw, placement=pl,
+                                checkpoint_path=path, max_chunks=1)
+    assert len(res_part.designs) < len(res_full.designs)
+    res_res = driver.run_fleet(*args, **kw, placement=pl,
+                               checkpoint_path=path, resume=True)
+    assert _params_equal(res_full.params, res_res.params)
+    _results_bitwise_histories(res_full, res_res)
+
+    res_v = eng.run_fleet(*args, **kw)         # single-device reference
+    _compare_histories(res_v, res_full, exact=False)
+    assert _params_maxdiff(res_v.params, res_full.params) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# solve_batch through the placement layer
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_solve_batch_sharded_matches_vmap():
+    """A 6-scenario SCA design batch (pads to 8 over the 2x2 mesh) sharded
+    via ShardedPlacement matches the single-device vmap batch <= 1e-7
+    relative."""
+    from benchmarks.sca_bench import make_prm as solver_prm
+    from repro import solvers
+
+    prms = [solver_prm(6, s) for s in range(6)]
+    ref = solvers.solve_batch(prms)
+    got = solvers.solve_batch(
+        prms, placement=ShardedPlacement(make_debug_mesh(2, 2)))
+    np.testing.assert_allclose(got.gamma, ref.gamma, rtol=1e-7)
+    np.testing.assert_allclose(got.objective, ref.objective, rtol=1e-7)
+    np.testing.assert_allclose(got.alpha, ref.alpha, rtol=1e-7)
+
+
+def test_solve_batch_vmap_placement_matches_default():
+    """placement=VmapPlacement() is the same program as the default."""
+    from benchmarks.sca_bench import make_prm as solver_prm
+    from repro import solvers
+
+    prms = [solver_prm(6, s) for s in range(2)]
+    ref = solvers.solve_batch(prms)
+    got = solvers.solve_batch(prms, placement=VmapPlacement())
+    np.testing.assert_array_equal(got.gamma, ref.gamma)
+    np.testing.assert_array_equal(got.objective, ref.objective)
