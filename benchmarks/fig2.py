@@ -1,21 +1,24 @@
-"""Paper Fig. 2 reproduction: test accuracy (2a) and global loss (2b) vs
-FL rounds for all seven schemes on the non-iid MNIST-like task.
+"""Fig.-2-style reproduction for any registered task: test accuracy (2a)
+and global loss (2b) vs FL rounds for all seven schemes.
 
-    PYTHONPATH=src python -m benchmarks.fig2 [--bench] [--sharded] [--rounds N]
+    PYTHONPATH=src python -m benchmarks.fig2 [--task paper_mlp|cifar_conv]
+        [--bench] [--bench-placement] [--sharded] [--rounds N]
+        [--checkpoint] [--resume]
 
-All seven schemes run as ONE compiled scan program (fl.engine.run_fleet,
-DESIGN.md §Engine): the schemes are stacked into a SchemeBatch pytree and
-the round loop is a chunked lax.scan vmapped over the scheme axis.  On the
-default full-batch path the fleet reproduces the pre-engine per-scheme host
-loop (kept as ``engine="legacy"``) to float rounding, with identical
-key/fading/noise streams.
+The workload comes from the task registry (``repro.tasks``, DESIGN.md
+§Tasks): ``paper_mlp`` (default) is the paper's §IV experiment and stays
+bit-identical to the pre-task hand-wired path; ``cifar_conv`` is the
+CIFAR-class Dirichlet-non-iid conv workload, writing its artifacts to
+experiments/cifar/.  All seven schemes run as ONE compiled scan program
+(``fl.driver.run_fleet_task``); ``--sharded`` shards the scheme grid over
+the ("data", "model") debug mesh and ``--checkpoint`` / ``--resume`` turn
+on chunk-boundary checkpointing with mid-grid resume.
 
-``--bench`` records the engine-vs-legacy wall-clock comparison for the full
-7-scheme x ``--rounds`` grid into experiments/fig2/engine_benchmark.json:
-the legacy host loop (one jitted call per round per scheme, full batch) vs
-the scan fleet in full-batch equivalence mode vs the scan fleet in
-minibatch throughput mode (on-device sampling + flattened Pallas
-aggregation) — the configuration the per-PR sweeps use.
+``--bench`` records the engine-vs-legacy wall-clock comparison into
+<artifacts>/engine_benchmark.json.  ``--bench-placement`` (also implied by
+``--bench``) adds the placement-vs-placement comparison — vmap vs sharded
+at growing K*S — and refreshes the repo-root ``BENCH_engine.json`` summary
+(headline walls + speedups, machine-readable across PRs).
 
 Claims validated (paper §IV):
   * Ideal FedAvg best everywhere.
@@ -32,57 +35,66 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.paper_mlp import CONFIG as PAPER
+from repro import tasks
 from repro.core import channel, power_control as pcm
 from repro.core.theory import OTAParams
-from repro.data import partition, synthetic
-from repro.fl.driver import run_fleet
-from repro.fl.server import FLRunConfig, run_fl_legacy
-from repro.models import mlp
-from repro.models.param import init_params
+from repro.fl.driver import run_fleet_task
+from repro.fl.server import run_fl_legacy
+from repro.tasks.base import Task
 
 SCHEMES = ["ideal", "opc", "sca", "lcpc", "vanilla", "bbfl_interior",
            "bbfl_alternative"]
-# constant step sizes per scheme (grid-searched once, as in the paper)
-ETAS = {"ideal": 0.08, "opc": 0.06, "sca": 0.06, "lcpc": 0.05,
-        "vanilla": 0.05, "bbfl_interior": 0.06, "bbfl_alternative": 0.06}
 # minibatch size of the engine's throughput mode (--bench; per-PR sweeps)
 BENCH_BATCH = 128
 
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                            "fig2")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BENCH_SUMMARY = os.path.join(ROOT, "BENCH_engine.json")
 
 
-def build_world(seed: int = 0, noise: float = 0.75,
-                samples_per_class: int = 1000):
-    wcfg = PAPER.wireless()
+def _task(task) -> Task:
+    """Resolve a task name/instance and require the fleet runtime.  Raises
+    KeyError/ValueError (catchable from library callers); main() translates
+    to SystemExit for the CLI."""
+    if isinstance(task, str):
+        return tasks.get(task, expect_runtime="fleet")
+    if task.runtime != "fleet":
+        raise ValueError(f"task {task.name!r} is a {task.runtime!r}-runtime "
+                         f"workload; this benchmark needs a fleet task")
+    return task
+
+
+def artifact_dir(task) -> str:
+    task = _task(task)
+    return os.path.join(ROOT, "experiments", task.artifact_tag or task.name)
+
+
+def build_world(task="paper_mlp", seed: int = 0):
+    """Wireless deployment + OTA design constants + materialized task data.
+
+    The deployment geometry is seeded independently of the data seed (the
+    paper fixes one wireless world across data seeds), matching the
+    committed pre-task fig2 world bit-for-bit on ``paper_mlp``.
+    """
+    task = _task(task)
+    wcfg = channel.WirelessConfig(num_devices=task.num_devices, seed=0)
     dep = channel.deploy(wcfg)
-    x, y, xt, yt = synthetic.mnist_like(samples_per_class, noise=noise,
-                                        seed=seed)
-    shards = partition.partition_by_label(x, y, PAPER.num_devices,
-                                          PAPER.labels_per_device,
-                                          PAPER.max_devices_per_label,
-                                          seed=seed)
-    xd, yd = partition.stack_shards(shards)
-    prm = OTAParams(d=mlp.PARAM_DIM, gmax=PAPER.gmax,
+    td = task.build_data(seed)
+    prm = OTAParams(d=task.param_dim,
+                    gmax=float(task.defaults.get("gmax", 10.0)),
                     es=wcfg.energy_per_sample, n0=wcfg.noise_psd,
-                    gains=dep.gains,
-                    sigma_sq=np.zeros(PAPER.num_devices),
+                    gains=dep.gains, sigma_sq=np.zeros(task.num_devices),
                     eta=0.05, lsmooth=1.0, kappa_sq=4.0)
-    return dep, prm, (xd, yd), (x, y), (xt, yt)
+    return dep, prm, td
 
 
-def _make_eval(x, y, xt, yt):
-    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
-    xg, yg = jnp.asarray(x[:4000]), jnp.asarray(y[:4000])
-
-    def evals(params):
-        return {"acc": mlp.accuracy(params, xt_j, yt_j),
-                "global_loss": mlp.mlp_loss(params, (xg, yg))}
-    return evals
+def make_schemes(task: Task, dep, prm, names=SCHEMES) -> list:
+    """One PowerControl per scheme, each designed at the task's
+    grid-searched step size (eta enters the (P1) objective)."""
+    return [pcm.make_power_control(
+        n, dep, prm.replace(eta=task.eta_for(n, float(prm.eta))))
+        for n in names]
 
 
 def _fleet_histories(res, wall_total: float):
@@ -104,52 +116,58 @@ def _fleet_histories(res, wall_total: float):
 
 def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         schemes=SCHEMES, log=False, engine: str = "fleet",
-        batch_size: int = 0, save: bool = True, placement=None,
-        with_result: bool = False):
-    """Fig. 2 histories for all schemes.
+        batch_size=0, save: bool = True, placement=None,
+        with_result: bool = False, task="paper_mlp",
+        checkpoint_path=None, resume: bool = False):
+    """Fig.-2-style histories for all schemes on the given task.
 
     engine="fleet": one compiled scan program for the whole scheme grid,
-    through the placement-aware host driver (fl.driver, DESIGN.md
-    §Placement); ``placement`` routes the grid onto hardware (None = the
-    single-device vmap path, ShardedPlacement(mesh) to shard the scheme
-    cells over a mesh).
+    through the task-first host driver (fl.driver.run_fleet_task);
+    ``placement`` routes the grid onto hardware (None = single-device
+    vmap, ShardedPlacement(mesh) to shard the scheme cells over a mesh),
+    ``checkpoint_path``/``resume`` persist and fast-forward the fleet at
+    chunk boundaries.
     engine="legacy": the pre-engine host loop, one scheme at a time (the
-    wall-clock baseline; bit-reproduces the committed pre-engine curves).
-    batch_size=0 is the paper's full-batch §IV protocol — on it the fleet
-    matches the legacy loop's trajectories (same seeds) to float rounding.
-    batch_size>0 switches the fleet to on-device minibatch sampling and the
-    flattened Pallas aggregation (the cheap per-PR sweep mode).
+    wall-clock baseline; bit-reproduces the committed pre-engine curves
+    on paper_mlp).
+    batch_size=0 is full batch (the paper's §IV protocol — on paper_mlp
+    the fleet matches the legacy loop to float rounding); None takes the
+    task's preferred batch size; batch_size>0 switches to on-device
+    minibatch sampling and the flattened Pallas aggregation.
     with_result=True also returns the driver's FLResult (the honest
     wall_compile/wall_exec split for --bench).
     """
-    dep, prm, data, (x, y), (xt, yt) = build_world(seed)
-    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
-    evals = jax.jit(_make_eval(x, y, xt, yt))
+    task = _task(task)
+    if batch_size is None:
+        batch_size = int(task.defaults.get("batch_size", 0))
+    dep, prm, td = build_world(task, seed)
+    params0 = task.init_params(seed)
+    evals = task.make_eval(td)
 
     res = None
     if engine == "fleet":
-        run_cfg = FLRunConfig(num_rounds=num_rounds, eval_every=eval_every,
-                              gmax=PAPER.gmax, seed=seed,
-                              batch_size=batch_size)
-        pcs = [pcm.make_power_control(n, dep, prm.replace(
-            eta=ETAS.get(n, 0.05))) for n in schemes]
-        res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
-                        run_cfg, evals,
-                        etas=[ETAS.get(n, 0.05) for n in schemes],
-                        flat=batch_size > 0, log=log, placement=placement)
+        run_cfg = task.run_config(num_rounds=num_rounds,
+                                  eval_every=eval_every, seed=seed,
+                                  batch_size=batch_size)
+        pcs = make_schemes(task, dep, prm, schemes)
+        res = run_fleet_task(task, pcs, dep.gains, run_cfg, task_data=td,
+                             params=params0, eval_fn=evals,
+                             flat=batch_size > 0, log=log,
+                             placement=placement,
+                             checkpoint_path=checkpoint_path, resume=resume)
         histories = _fleet_histories(res, res.wall)
     elif engine == "legacy":
         histories = {}
+        ev_jit = jax.jit(evals)
         for name in schemes:
-            pc = pcm.make_power_control(name, dep,
-                                        prm.replace(eta=ETAS.get(name, 0.05)))
-            run_cfg = FLRunConfig(eta=ETAS.get(name, 0.05),
-                                  num_rounds=num_rounds,
-                                  eval_every=eval_every, gmax=PAPER.gmax,
-                                  seed=seed, batch_size=batch_size)
+            eta = task.eta_for(name, 0.05)
+            pc = pcm.make_power_control(name, dep, prm.replace(eta=eta))
+            run_cfg = task.run_config(eta=eta, num_rounds=num_rounds,
+                                      eval_every=eval_every, seed=seed,
+                                      batch_size=batch_size)
             t0 = time.time()
-            _, hist = run_fl_legacy(mlp.mlp_loss, params0, pc, dep.gains,
-                                    data, run_cfg, evals, log=log)
+            _, hist = run_fl_legacy(task.loss_fn, params0, pc, dep.gains,
+                                    td.train, run_cfg, ev_jit, log=log)
             histories[name] = hist
             if log:
                 print(f"  {name}: {time.time() - t0:.1f}s")
@@ -157,8 +175,9 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         raise ValueError(f"unknown engine {engine!r}")
 
     if save:
-        os.makedirs(ARTIFACT_DIR, exist_ok=True)
-        with open(os.path.join(ARTIFACT_DIR, f"histories_seed{seed}.json"),
+        out = artifact_dir(task)
+        os.makedirs(out, exist_ok=True)
+        with open(os.path.join(out, f"histories_seed{seed}.json"),
                   "w") as f:
             json.dump(histories, f, indent=1)
     if with_result:
@@ -200,9 +219,10 @@ def _history_deltas(a: dict, b: dict) -> dict:
 
 
 def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
-              batch_size: int = BENCH_BATCH, log: bool = True) -> dict:
+              batch_size: int = BENCH_BATCH, task="paper_mlp",
+              log: bool = True) -> dict:
     """Engine-vs-legacy wall clock for the full scheme grid; writes
-    experiments/fig2/engine_benchmark.json.
+    <artifacts>/engine_benchmark.json.
 
     Three runs of the 7-scheme x num_rounds grid:
       legacy          pre-engine host loop, full batch (the old fig2 path)
@@ -211,30 +231,34 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
       fleet_minibatch one scan program, on-device batch_size sampling +
                       Pallas flattened aggregation — the per-PR sweep mode
 
-    Fleet walls are split into ``compile`` (through the end of the first
-    chunk — setup + the dominant XLA compile) and ``exec`` (steady-state),
-    straight from FLResult.wall_compile / wall_exec, so the JSON speedups
-    are honest about what amortizes over longer sweeps; the legacy loop
-    compiles per round and has no meaningful split.
+    All three top-line walls are measured with the SAME outer clock around
+    the whole run() call (world build, data generation, eval jit included)
+    so the speedup ratios compare like with like; the fleet rows
+    additionally carry FLResult's compile/exec split of the engine portion
+    — what amortizes over longer sweeps — while the legacy loop compiles
+    per round and has no meaningful split.
     """
+    task = _task(task)
     cfg = dict(num_rounds=num_rounds, eval_every=eval_every, seed=seed,
-               save=False)
+               save=False, task=task)
     t0 = time.time()
     legacy = run(engine="legacy", **cfg)
     wall_legacy = time.time() - t0
     if log:
         print(f"legacy loop (full batch): {wall_legacy:.1f}s")
 
+    t0 = time.time()
     fleet_full, res_full = run(engine="fleet", with_result=True, **cfg)
-    wall_full = res_full.wall
+    wall_full = time.time() - t0
     if log:
         print(f"scan fleet (full batch):  {wall_full:.1f}s "
               f"(compile {res_full.wall_compile:.1f}s"
               f" + exec {res_full.wall_exec:.1f}s)")
 
+    t0 = time.time()
     fleet_mb, res_mb = run(engine="fleet", batch_size=batch_size,
                            with_result=True, **cfg)
-    wall_mb = res_mb.wall
+    wall_mb = time.time() - t0
     if log:
         print(f"scan fleet (minibatch {batch_size}): {wall_mb:.1f}s "
               f"(compile {res_mb.wall_compile:.1f}s"
@@ -242,7 +266,8 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
 
     deltas = _history_deltas(legacy, fleet_full)
     report = {
-        "grid": {"schemes": SCHEMES, "num_rounds": num_rounds,
+        "grid": {"task": task.name, "schemes": SCHEMES,
+                 "num_rounds": num_rounds,
                  "eval_every": eval_every, "seed": seed,
                  "bench_batch_size": batch_size,
                  "device": jax.devices()[0].device_kind,
@@ -273,12 +298,145 @@ def benchmark(num_rounds: int = 150, eval_every: int = 15, seed: int = 0,
             "fleet_minibatch": {n: fleet_mb[n][-1]["acc"] for n in fleet_mb},
         },
     }
-    os.makedirs(ARTIFACT_DIR, exist_ok=True)
-    with open(os.path.join(ARTIFACT_DIR, "engine_benchmark.json"), "w") as f:
-        json.dump(report, f, indent=1)
+    _merge_benchmark_json(task, report)
     if log:
         print(json.dumps(report["speedup"], indent=1))
     return report
+
+
+# ---------------------------------------------------------------------------
+# Placement-vs-placement wall comparison (ROADMAP: vmap vs sharded at
+# growing K*S) + the repo-root BENCH_engine.json summary.
+# ---------------------------------------------------------------------------
+
+def _wall_split(res) -> dict:
+    return {"wall": round(res.wall, 2),
+            "compile": round(res.wall_compile, 2),
+            "exec": round(res.wall_exec, 2)}
+
+
+def placement_benchmark(task="paper_mlp", num_rounds: int = 30,
+                        eval_every: int = 15, seed: int = 0,
+                        batch_size: int = BENCH_BATCH,
+                        seeds_grid=(1, 2, 4), log: bool = True) -> dict:
+    """vmap-vs-sharded wall clocks for the 7-scheme grid at growing K*S.
+
+    Each grid point runs the same minibatch+flat fleet once per placement
+    (sharded only when >= 4 devices are visible — on CPU force them with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8); walls come from
+    FLResult's compile/exec split, and the exec-only speedup is the
+    number that scales with sweep length.
+    """
+    task = _task(task)
+    dep, prm, td = build_world(task, seed)
+    params0 = task.init_params(seed)
+    evals = task.make_eval(td)
+    pcs = make_schemes(task, dep, prm)
+    sharded = None
+    if jax.device_count() >= 4:
+        sharded = _sharded_placement()
+
+    rows = []
+    for s in seeds_grid:
+        run_cfg = task.run_config(num_rounds=num_rounds,
+                                  eval_every=eval_every, seed=seed,
+                                  batch_size=batch_size)
+        kw = dict(task_data=td, params=params0, eval_fn=evals,
+                  seeds=tuple(range(s)), flat=True)
+        res_v = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw)
+        row = {"k": len(SCHEMES), "s": s, "cells": len(SCHEMES) * s,
+               "vmap": _wall_split(res_v)}
+        if sharded is not None:
+            res_s = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw,
+                                   placement=sharded)
+            row["sharded"] = _wall_split(res_s)
+            row["sharded_devices"] = sharded.num_devices
+            row["exec_speedup_sharded_vs_vmap"] = round(
+                res_v.wall_exec / max(res_s.wall_exec, 1e-9), 2)
+        else:
+            row["sharded"] = "skipped (needs >= 4 devices; set XLA_FLAGS="
+            row["sharded"] += "--xla_force_host_platform_device_count=8)"
+        if log:
+            print(f"cells={row['cells']}: vmap exec "
+                  f"{row['vmap']['exec']}s"
+                  + (f", sharded exec {row['sharded']['exec']}s "
+                     f"({row['exec_speedup_sharded_vs_vmap']}x)"
+                     if sharded is not None else " (sharded skipped)"))
+        rows.append(row)
+
+    placement = {
+        "config": {"task": task.name, "num_rounds": num_rounds,
+                   "eval_every": eval_every, "seed": seed,
+                   "batch_size": batch_size,
+                   "device_count": jax.device_count(),
+                   "backend": jax.default_backend()},
+        "rows": rows,
+    }
+    _merge_benchmark_json(task, {"placement": placement})
+    write_bench_summary(task)
+    return placement
+
+
+def _benchmark_json_path(task) -> str:
+    return os.path.join(artifact_dir(task), "engine_benchmark.json")
+
+
+def _merge_benchmark_json(task, update: dict) -> dict:
+    """Merge ``update`` into the task's engine_benchmark.json (so a
+    placement-only rerun never clobbers the committed legacy-vs-engine
+    walls, and vice versa)."""
+    path = _benchmark_json_path(task)
+    report = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            report = json.load(f)
+    report.update(update)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+def write_bench_summary(task="paper_mlp") -> dict:
+    """Repo-root BENCH_engine.json: the machine-readable perf trajectory.
+
+    Condenses the task's engine_benchmark.json to headline walls and
+    speedups (engine-vs-legacy, sharded-vs-vmap per K*S point) so a later
+    PR — or a reviewer — can diff throughput without parsing the full
+    benchmark artifact.
+    """
+    task = _task(task)
+    path = _benchmark_json_path(task)
+    report = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            report = json.load(f)
+    summary = {"source": os.path.relpath(path, ROOT), "task": task.name}
+    if "grid" in report:
+        summary["grid"] = {k: report["grid"][k]
+                           for k in ("num_rounds", "eval_every",
+                                     "bench_batch_size", "backend", "device")
+                           if k in report["grid"]}
+    if "wall_s" in report:
+        summary["wall_s"] = report["wall_s"]
+    if "speedup" in report:
+        summary["speedup"] = report["speedup"]
+    if "placement" in report:
+        pl = report["placement"]
+        summary["placement"] = {
+            "config": pl["config"],
+            "rows": [{"cells": r["cells"],
+                      "vmap_exec_s": r["vmap"]["exec"],
+                      **({"sharded_exec_s": r["sharded"]["exec"],
+                          "exec_speedup":
+                              r["exec_speedup_sharded_vs_vmap"]}
+                         if isinstance(r.get("sharded"), dict) else
+                         {"sharded": "skipped"})}
+                     for r in pl["rows"]],
+        }
+    with open(BENCH_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    return summary
 
 
 def _sharded_placement():
@@ -296,34 +454,70 @@ def _sharded_placement():
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--task", default="paper_mlp",
+        help="registered fleet workload "
+             f"({'|'.join(tasks.names(runtime='fleet'))})")
     ap.add_argument("--bench", action="store_true",
-                    help="engine-vs-legacy wall-clock benchmark + JSON")
+                    help="engine-vs-legacy wall-clock benchmark + JSON "
+                         "(also runs the placement comparison)")
+    ap.add_argument("--bench-placement", action="store_true",
+                    help="vmap-vs-sharded wall comparison at growing K*S; "
+                         "refreshes repo-root BENCH_engine.json")
     ap.add_argument("--legacy", action="store_true",
                     help="run the pre-engine host loop instead of the fleet")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the scheme grid over the ('data', 'model') "
                          "debug mesh (DESIGN.md §Placement)")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="persist the fleet at chunk boundaries under the "
+                         "task's artifact dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="fast-forward from the task's checkpoint if present"
+                         " (implies --checkpoint)")
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--every", type=int, default=None,
                     help="eval cadence (default: 10, or 15 under --bench)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--batch-size", type=int, default=0,
-                    help="0 = full batch (paper); under --bench, the "
-                         f"minibatch mode size (default {BENCH_BATCH})")
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="0 = full batch (paper); default = the task's "
+                         f"preferred size; under --bench, the minibatch "
+                         f"mode size (default {BENCH_BATCH})")
     args = ap.parse_args(argv)
+    try:
+        task = _task(args.task)
+    except (KeyError, ValueError) as e:
+        raise SystemExit(str(e))
     if args.sharded and (args.legacy or args.bench):
         raise SystemExit("--sharded applies to the fleet engine only; "
                          "drop --legacy/--bench")
+    if (args.checkpoint or args.resume) \
+            and (args.legacy or args.bench or args.bench_placement):
+        raise SystemExit("--checkpoint/--resume apply to the fleet engine "
+                         "only; drop --legacy/--bench/--bench-placement")
     if args.bench:
         benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
-                  seed=args.seed,
+                  seed=args.seed, task=task,
                   batch_size=args.batch_size or BENCH_BATCH)
+        placement_benchmark(task=task, num_rounds=min(args.rounds, 30),
+                            eval_every=args.every or 15, seed=args.seed,
+                            batch_size=args.batch_size or BENCH_BATCH)
         return
+    if args.bench_placement:
+        placement_benchmark(task=task, num_rounds=min(args.rounds, 30),
+                            eval_every=args.every or 15, seed=args.seed,
+                            batch_size=args.batch_size or BENCH_BATCH)
+        return
+    ckpt_path = None
+    if args.checkpoint or args.resume:
+        ckpt_path = os.path.join(artifact_dir(task),
+                                 f"fleet_seed{args.seed}")
     hist = run(num_rounds=args.rounds, eval_every=args.every or 10,
-               seed=args.seed,
+               seed=args.seed, task=task,
                engine="legacy" if args.legacy else "fleet",
                batch_size=args.batch_size, log=True,
-               placement=_sharded_placement() if args.sharded else None)
+               placement=_sharded_placement() if args.sharded else None,
+               checkpoint_path=ckpt_path, resume=args.resume)
     for row in summarize(hist):
         print(row)
 

@@ -103,6 +103,52 @@ def smoke(seed: int = 0) -> None:
                 "redesigns": len(res.designs) - 1}), flush=True)
     print(f"# smoke solver + adaptive engine: {time.time() - t0:.1f}s",
           flush=True)
+
+    # --- task-registry gate (DESIGN.md §Tasks): grow a few-round
+    # cifar_conv fleet through the fleet stack INCLUDING a kill-and-resume
+    # step; on the forced >= 4-device mesh (the CI tasks-smoke job) the
+    # grid shards over the debug mesh, otherwise it runs vmapped ---
+    import os
+    import tempfile
+
+    from repro import tasks
+    from repro.fl.driver import run_fleet_task
+
+    t0 = time.time()
+    task = tasks.get("cifar_conv", channels=(8, 16), hidden=32,
+                     samples_per_class=24, test_per_class=10, alpha=1.0)
+    dep_t, prm_t, td = fig2.build_world(task, seed=seed)
+    pcs_t = fig2.make_schemes(task, dep_t, prm_t, ["ideal", "sca"])
+    run_cfg = task.run_config(num_rounds=6, eval_every=2, batch_size=4,
+                              seed=seed)
+    placement, where = None, "vmap"
+    if jax.device_count() >= 4:
+        from repro.fl.placement import ShardedPlacement
+        from repro.launch.mesh import make_debug_mesh
+        placement = ShardedPlacement(make_debug_mesh(2, 2))
+        where = f"sharded{placement.num_devices}"
+    kw = dict(task_data=td, seeds=(0, 1), flat=True, placement=placement)
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = os.path.join(tmp, "cifar_fleet")
+        res_part = run_fleet_task(task, pcs_t, dep_t.gains, run_cfg, **kw,
+                                  checkpoint_path=ck, max_chunks=1)  # kill
+        rounds_part = res_part.traces["active_devices"].shape[-1]
+        assert rounds_part < run_cfg.num_rounds, rounds_part
+        res_res = run_fleet_task(task, pcs_t, dep_t.gains, run_cfg, **kw,
+                                 checkpoint_path=ck, resume=True)
+        res_full = run_fleet_task(task, pcs_t, dep_t.gains, run_cfg, **kw)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(res_res.params),
+                               jax.tree.leaves(res_full.params))), \
+        "cifar_conv resume is not bitwise vs the uninterrupted fleet"
+    final_acc = np.asarray(res_res.evals[-1][1]["acc"])
+    assert final_acc.shape == (2, 2) and np.all(np.isfinite(final_acc))
+    print(_csv({"bench": f"smoke_cifar_conv_{where}",
+                "final_acc_ideal": round(float(final_acc[0].mean()), 4),
+                "resumed_rounds_done": rounds_part,
+                "resume_bitwise": 1}), flush=True)
+    print(f"# smoke cifar_conv task fleet ({where}, kill+resume): "
+          f"{time.time() - t0:.1f}s", flush=True)
     print("# smoke OK", flush=True)
 
 

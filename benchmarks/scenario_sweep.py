@@ -15,10 +15,11 @@ the scenario's family-aware statistics:
     objective   2 eta L zeta + bias                      (the (P1) objective)
 
 and emits one CSV row per (scenario, scheme).  With ``--train`` it also runs
-the paper's MLP task on each scenario's FadingProcess — the scheme axis as
-one compiled scan fleet per scenario, through the placement-aware driver
-(``fl.driver.run_fleet``; ``--sharded`` shards the cells over the debug
-mesh) — and appends test accuracy.
+an FL workload from the task registry (``--task``, default the paper's MLP;
+DESIGN.md §Tasks) on each scenario's FadingProcess — the scheme axis as
+one compiled scan fleet per scenario, through the task-first driver
+(``fl.driver.run_fleet_task``; ``--sharded`` shards the cells over the
+debug mesh) — and appends test accuracy.
 """
 from __future__ import annotations
 
@@ -78,11 +79,15 @@ def sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
 def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
                 num_rounds: int = 100, eval_every: int = 20,
                 seed: int = 0, log: bool = False,
-                batch_size: int = 0, placement=None) -> list:
-    """Short FL runs (paper MLP task) per (scenario, scheme).
+                batch_size=None, placement=None,
+                task="paper_mlp") -> list:
+    """Short FL runs of a registered task per (scenario, scheme).
 
-    Per scenario, the whole scheme axis runs as ONE compiled scan fleet
-    through the placement-aware host driver (fl.driver, DESIGN.md
+    The workload — data, params, loss, eval, per-scheme step sizes —
+    comes from the task registry (``repro.tasks``, DESIGN.md §Tasks) and
+    is built ONCE, shared across every scenario fleet.  Per scenario, the
+    whole scheme axis runs as ONE compiled scan fleet through the
+    task-first host driver (fl.driver.run_fleet_task, DESIGN.md
     §Placement) on the scenario's FadingProcess — the default
     sca/lcpc/zero_bias grid is a homogeneous TruncatedInversion stack, so
     a single cell program covers it; aggregation rides the flattened
@@ -91,41 +96,44 @@ def train_sweep(scenario_names=scn.SWEEP_FAMILIES, schemes=SCHEMES,
     fl.placement.ShardedPlacement(mesh) shards the cells over the
     ("data", "model") mesh).
     """
-    import jax
-    import jax.numpy as jnp
+    from repro import tasks as task_registry
+    from repro.fl.driver import run_fleet_task
 
-    from repro.data import partition, synthetic
-    from repro.fl.driver import run_fleet
-    from repro.fl.server import FLRunConfig
-    from repro.models import mlp
-    from repro.models.param import init_params
-
-    x, y, xt, yt = synthetic.mnist_like(PAPER.samples_per_class, noise=0.75,
-                                        seed=seed)
-    shards = partition.partition_by_label(x, y, PAPER.num_devices,
-                                          PAPER.labels_per_device,
-                                          PAPER.max_devices_per_label,
-                                          seed=seed)
-    data = partition.stack_shards(shards)
-    params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(seed))
-    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
-    evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+    if isinstance(task, str):
+        task = task_registry.get(task, expect_runtime="fleet")
+    elif task.runtime != "fleet":
+        raise ValueError(f"task {task.name!r} is not a fleet workload")
+    if batch_size is None:   # the task's preferred sweep mode (fig2 ditto)
+        batch_size = int(task.defaults.get("batch_size", 0))
+    td = task.build_data(seed)
+    params0 = task.init_params(seed)
+    evals = task.make_eval(td)
 
     rows = []
     for sc_name in scenario_names:
         sc = scn.get_scenario(sc_name)
         dep = scn.realize(sc, seed=seed)
-        prm = scn.make_ota_params(dep, d=mlp.PARAM_DIM, gmax=PAPER.gmax,
+        if len(dep.gains) != task.num_devices:
+            raise ValueError(
+                f"scenario {sc_name!r} deploys {len(dep.gains)} devices "
+                f"but task {task.name!r} partitions {task.num_devices}")
+        prm = scn.make_ota_params(dep, d=task.param_dim,
+                                  gmax=float(task.defaults.get("gmax",
+                                                               PAPER.gmax)),
                                   eta=0.05, kappa_sq=4.0)
         fading = scn.make_fading_process(dep, sc.dynamics)
         # global-CSI schemes pick up dropout-awareness from dep.p_dropout
         pcs = [pcm.make_power_control(s, dep, prm) for s in schemes]
-        run_cfg = FLRunConfig(eta=0.05, num_rounds=num_rounds,
-                              eval_every=eval_every, gmax=PAPER.gmax,
-                              seed=seed, batch_size=batch_size)
-        res = run_fleet(mlp.mlp_loss, params0, pcs, dep.gains, data,
-                        run_cfg, evals, fading=fading, flat=True, log=log,
-                        placement=placement)
+        run_cfg = task.run_config(eta=0.05, num_rounds=num_rounds,
+                                  eval_every=eval_every, seed=seed,
+                                  batch_size=batch_size)
+        # schemes are designed at prm.eta above, so train at that same
+        # operating point (the task's per-scheme eta map is fig2's concern)
+        res = run_fleet_task(task, pcs, dep.gains, run_cfg, task_data=td,
+                             params=params0, eval_fn=evals,
+                             etas=[run_cfg.eta] * len(schemes),
+                             fading=fading, flat=True, log=log,
+                             placement=placement)
         final = res.evals[-1][1]["acc"]
         for i, scheme in enumerate(schemes):
             rows.append({"scenario": sc_name, "scheme": scheme,
@@ -146,10 +154,16 @@ def main(argv=None) -> None:
                     help="sweep every registered scenario")
     ap.add_argument("--train", action="store_true",
                     help="also run short FL training per (scenario, scheme)")
+    ap.add_argument("--task", default="paper_mlp",
+                    help="registered workload for --train "
+                         "(paper_mlp | cifar_conv; DESIGN.md §Tasks)")
     ap.add_argument("--sharded", action="store_true",
                     help="shard each scenario's scheme grid over the "
                          "('data', 'model') debug mesh (needs >= 4 devices)")
     ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="minibatch size for --train (0 = full batch; "
+                         "default = the task's preferred size)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.sharded and not args.train:
@@ -170,7 +184,8 @@ def main(argv=None) -> None:
             from benchmarks.fig2 import _sharded_placement
             placement = _sharded_placement()
         trows = train_sweep(names, num_rounds=args.rounds, seed=args.seed,
-                            placement=placement)
+                            batch_size=args.batch_size,
+                            placement=placement, task=args.task)
         print("scenario,scheme,final_acc,rounds")
         for r in trows:
             print(f"{r['scenario']},{r['scheme']},{r['final_acc']},"

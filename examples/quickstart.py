@@ -1,43 +1,59 @@
-"""Quickstart: the paper's experiment in ~40 lines.
+"""Quickstart: any registered FL workload in ~40 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--task paper_mlp|cifar_conv]
 
-Trains the paper's MLP over a simulated heterogeneous wireless network with
-three OTA power-control schemes — all three as ONE compiled scan program:
-the schemes are stacked into a vmapped fleet (core.power_control
-.stack_schemes) and the round loop runs as lax.scan on device
-(fl.engine.run_fleet, DESIGN.md §Engine).
+Trains a task from the workload registry (repro.tasks, DESIGN.md §Tasks)
+over a simulated heterogeneous wireless network with three OTA
+power-control schemes — all three as ONE compiled scan program: the
+schemes are stacked into a vmapped fleet (core.power_control
+.stack_schemes) and the round loop runs as lax.scan on device through the
+task-first driver (fl.driver.run_fleet_task, DESIGN.md §Engine).
 """
+import argparse
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import tasks
 from repro.core import channel, power_control as pcm
 from repro.core.theory import OTAParams
-from repro.data import partition, synthetic
-from repro.fl.engine import run_fleet
-from repro.fl.server import FLRunConfig
-from repro.models import mlp
-from repro.models.param import init_params
 
-# 1. wireless world: 10 devices, log-distance path loss, Rayleigh fading
-wcfg = channel.WirelessConfig(num_devices=10, seed=0)
+ap = argparse.ArgumentParser()
+ap.add_argument("--task", default="paper_mlp",
+                help="registered fleet workload "
+                     f"({'|'.join(tasks.names(runtime='fleet'))})")
+args = ap.parse_args()
+
+# 1. the workload: dataset builder + non-iid partitioner + model + eval,
+#    bundled behind one name.  paper_mlp = the paper's §IV experiment
+#    (ring label split, 814k-param MLP); cifar_conv = 32x32x3 Dirichlet
+#    non-iid convnet.  The registry's factory overrides shrink cifar to
+#    demo scale here (CPU convs are slow); the full-size workload runs
+#    through `python -m benchmarks.fig2 --task cifar_conv`.
+DEMO = {
+    "paper_mlp": dict(overrides={}, rounds=60, every=20, batch=64),
+    "cifar_conv": dict(overrides=dict(channels=(8, 16), hidden=64,
+                                      samples_per_class=150),
+                       rounds=12, every=4, batch=32),
+}.get(args.task, dict(overrides={}, rounds=30, every=10, batch=32))
+try:
+    task = tasks.get(args.task, expect_runtime="fleet", **DEMO["overrides"])
+except (KeyError, ValueError) as e:
+    raise SystemExit(str(e))
+td = task.build_data(seed=0)
+print(f"task {task.name}: d={task.param_dim} params, "
+      f"{task.num_devices} devices, shard length {td.train[1].shape[1]}")
+
+# 2. wireless world: log-distance path loss, Rayleigh fading
+wcfg = channel.WirelessConfig(num_devices=task.num_devices, seed=0)
 dep = channel.deploy(wcfg)
 print("device distances (m):", np.round(dep.distances, 0))
 
-# 2. non-iid data: 2 digits per device, <= 2 devices per digit (paper §IV)
-x, y, xt, yt = synthetic.mnist_like(500, seed=0)
-shards = partition.partition_by_label(x, y, 10, seed=0)
-xd, yd = partition.stack_shards(shards)
-
 # 3. problem constants for the Theorem-1-driven power control design
-prm = OTAParams(d=mlp.PARAM_DIM, gmax=10.0, es=wcfg.energy_per_sample,
-                n0=wcfg.noise_psd, gains=dep.gains, sigma_sq=np.zeros(10),
+prm = OTAParams(d=task.param_dim, gmax=task.defaults["gmax"],
+                es=wcfg.energy_per_sample, n0=wcfg.noise_psd,
+                gains=dep.gains, sigma_sq=np.zeros(task.num_devices),
                 eta=0.05, lsmooth=1.0, kappa_sq=4.0)
-
-params0 = init_params(mlp.mlp_defs(), jax.random.PRNGKey(0))
-xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
-evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
 
 # 4. three schemes, one compiled program: noiseless reference, the paper's
 #    SCA design, and the zero-instantaneous-bias weakest-channel baseline.
@@ -45,9 +61,18 @@ evals = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
 #    aggregation rides the flattened Pallas kernel path.
 names = ["ideal", "sca", "vanilla"]
 schemes = [pcm.make_power_control(n, dep, prm) for n in names]
-run_cfg = FLRunConfig(eta=0.05, num_rounds=60, eval_every=20, batch_size=64)
-res = run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, (xd, yd),
-                run_cfg, evals, flat=True)
+run_cfg = task.run_config(num_rounds=DEMO["rounds"],
+                          eval_every=DEMO["every"],
+                          batch_size=DEMO["batch"])
+
+from repro.fl.driver import run_fleet_task
+
+# the schemes were designed at prm.eta above, so train at that same
+# operating point (run_fleet_task would otherwise default to the task's
+# per-scheme eta map, which belongs with fig2's per-scheme designs)
+etas = [run_cfg.eta] * len(names)
+res = run_fleet_task(task, schemes, dep.gains, run_cfg, task_data=td,
+                     etas=etas, flat=True)
 for i, name in enumerate(names):
     traj = " -> ".join(f"{float(ev['acc'][i, 0]):.3f}"
                        for _, ev in res.evals)
@@ -60,7 +85,6 @@ print(f"one compiled fleet, wall {res.wall:.1f}s; per-round traces: "
 #    (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8, or a real
 #    accelerator mesh) the [scheme x seed] cells shard over the
 #    ("data", "model") mesh — the script is unchanged either way.
-from repro.fl.driver import run_fleet as run_fleet_placed
 from repro.fl.placement import ShardedPlacement, VmapPlacement
 from repro.launch.mesh import make_debug_mesh
 
@@ -70,9 +94,9 @@ if jax.device_count() >= 4:
 else:
     placement = VmapPlacement()
     where = "vmapped on 1 device"
-res2 = run_fleet_placed(mlp.mlp_loss, params0, schemes, dep.gains, (xd, yd),
-                        run_cfg, evals, flat=True, seeds=(0, 1),
-                        placement=placement)
+res2 = run_fleet_task(task, schemes, dep.gains, run_cfg, task_data=td,
+                      etas=etas, flat=True, seeds=(0, 1),
+                      placement=placement)
 final = res2.evals[-1][1]["acc"]
 print(f"[scheme x seed] grid {where}: final acc per cell "
       f"{np.round(np.asarray(final), 3).tolist()}")

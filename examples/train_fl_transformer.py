@@ -8,7 +8,10 @@ transformer for a few hundred steps.
     PYTHONPATH=src python examples/train_fl_transformer.py --full
 
 Wraps repro.launch.train with a qwen-family config sized to the target
-parameter count; the same train step pjit-shards on a real mesh.
+parameter count; the same train step pjit-shards on a real mesh.  The
+workload — model bundle, non-iid vocab-band client shards, held-out eval —
+comes from the ``token_stream`` task in the registry (repro.tasks,
+DESIGN.md §Tasks); this script only picks sizes and a power-control scheme.
 """
 import argparse
 import sys

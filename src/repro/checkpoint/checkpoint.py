@@ -26,18 +26,29 @@ def _flatten(tree: PyTree):
     return out
 
 
+# npz key carrying the JSON-encoded meta dict; lives INSIDE the archive so
+# meta and arrays are one atomic unit (see save()).
+_META_KEY = "__meta__"
+
+
 def save(path: str, tree: PyTree, meta: dict | None = None) -> None:
-    """Atomic write: both files go to temp names and are os.replace'd into
-    place, npz first and manifest last.  A kill mid-save leaves either the
-    previous complete checkpoint or the new one — never a truncated npz,
-    and never a manifest ahead of its arrays (a stale-manifest/fresh-npz
-    mix would make a resumed fleet re-run a chunk from an already-advanced
-    carry and silently drift off the uninterrupted run)."""
+    """Atomic write.  ``meta`` rides INSIDE the npz (as a JSON byte array
+    under ``__meta__``), so the arrays and the meta that describes them —
+    e.g. the fleet driver's chunks_done counter — are one atomic
+    os.replace: a kill at any point leaves either the previous complete
+    checkpoint or the new one, never a fresh carry with a stale counter
+    (which would make a resumed fleet re-run a chunk from an
+    already-advanced carry and silently drift off the uninterrupted run).
+    The human-readable manifest is written after the npz and is advisory
+    only — readers take meta from the archive."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
+    if _META_KEY in flat:
+        raise ValueError(f"pytree path collides with {_META_KEY!r}")
     npz_path = path if path.endswith(".npz") else path + ".npz"
     tmp = npz_path + ".tmp.npz"
-    np.savez(tmp, **flat)
+    meta_bytes = np.frombuffer(json.dumps(meta or {}).encode(), np.uint8)
+    np.savez(tmp, **flat, **{_META_KEY: meta_bytes})
     os.replace(tmp, npz_path)
     manifest = {"keys": sorted(flat), "meta": meta or {}}
     tmp_manifest = _manifest_path(path) + ".tmp"
@@ -53,15 +64,21 @@ def _manifest_path(path: str) -> str:
 
 def restore(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (values ignored)."""
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    return restore_flat(load_flat(path), like)
+
+
+def restore_flat(flat: dict, like: PyTree) -> PyTree:
+    """``restore`` from an already-loaded ``load_flat`` dict — callers that
+    need both the structured carry and the variable-length extras (the
+    fleet driver) read the archive once and reuse it."""
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pth, leaf in flat_like:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pth)
-        if key not in npz:
+        if key not in flat:
             raise KeyError(f"checkpoint missing key {key!r}")
-        arr = npz[key]
+        arr = flat[key]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
@@ -79,9 +96,15 @@ def load_flat(path: str) -> dict:
     when the sweep was preempted (fl.driver, DESIGN.md §Placement).
     """
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
-    return {k: npz[k] for k in npz.files}
+    return {k: npz[k] for k in npz.files if k != _META_KEY}
 
 
 def load_meta(path: str) -> dict:
+    """Meta from inside the npz (atomic with the arrays); checkpoints
+    written before meta moved into the archive fall back to the
+    manifest."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    if _META_KEY in npz.files:
+        return json.loads(bytes(npz[_META_KEY]).decode())
     with open(_manifest_path(path)) as f:
         return json.load(f)["meta"]

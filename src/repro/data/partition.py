@@ -1,9 +1,18 @@
-"""Non-iid federated data partitioning (paper §IV protocol).
+"""Non-iid federated data partitioning.
 
-Each device holds samples of exactly ``labels_per_device`` digits, and any
-given label appears in the local datasets of at most ``max_devices_per_label``
-devices.  With N = 10, 2 labels/device and <= 2 devices/label this is the
-exact bipartite matching of the paper: device m <- {m, (m+1) mod 10}.
+Two protocols:
+
+* **Ring** (paper §IV): each device holds samples of exactly
+  ``labels_per_device`` digits, and any given label appears in the local
+  datasets of at most ``max_devices_per_label`` devices.  With N = 10,
+  2 labels/device and <= 2 devices/label this is the exact bipartite
+  matching of the paper: device m <- {m, (m+1) mod 10}.
+
+* **Dirichlet(α)** (``partition_dirichlet``, the Hsu-et-al. protocol the
+  heterogeneous-data OTA-FL literature sweeps): for every label, device
+  shares are drawn from Dirichlet(α 1_N) — α -> 0 gives one-device-per-
+  label shards, α -> inf recovers the i.i.d. split.  Sample-conserving:
+  every sample lands on exactly one device.
 """
 from __future__ import annotations
 
@@ -61,13 +70,81 @@ def partition_by_label(x: np.ndarray, y: np.ndarray, num_devices: int,
     return out
 
 
-def stack_shards(shards):
-    """Stack equal-size shards into arrays with leading device axis [N, ...].
+def partition_dirichlet(x: np.ndarray, y: np.ndarray, num_devices: int,
+                        alpha: float = 0.5, seed: int = 0,
+                        min_per_device: int = 1):
+    """Dirichlet(α) label partition across ``num_devices`` devices.
 
-    Truncates to the minimum shard size so the result is rectangular
-    (vmap-able across devices).
+    For each class c the class's (shuffled) samples are split into
+    contiguous chunks sized by a draw pi_c ~ Dirichlet(α 1_N), so the
+    total sample count is conserved exactly.  Small α concentrates each
+    class on few devices (strong label skew); large α approaches uniform
+    per-device label histograms.
+
+    ``min_per_device`` repairs pathological draws (a device with fewer
+    than that many samples steals from the largest shard) so downstream
+    ``stack_shards`` never sees an empty device.  Returns a list of
+    (x_m, y_m), one per device.
     """
-    n_min = min(len(s[1]) for s in shards)
-    xs = np.stack([s[0][:n_min] for s in shards])
-    ys = np.stack([s[1][:n_min] for s in shards])
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    num_classes = int(y.max()) + 1
+    rng = np.random.default_rng(seed)
+    assign = [[] for _ in range(num_devices)]
+    for c in range(num_classes):
+        idx = np.where(y == c)[0]
+        rng.shuffle(idx)
+        pi = rng.dirichlet(np.full(num_devices, float(alpha)))
+        # contiguous-chunk split by cumulative shares: conserves samples
+        cuts = np.floor(np.cumsum(pi) * len(idx)).astype(int)
+        cuts[-1] = len(idx)
+        start = 0
+        for m, stop in enumerate(cuts):
+            if stop > start:
+                assign[m].append(idx[start:stop])
+            start = stop
+    shards_idx = [np.concatenate(a) if a else np.array([], dtype=int)
+                  for a in assign]
+    # repair: every device keeps at least min_per_device samples
+    for m in range(num_devices):
+        while len(shards_idx[m]) < min_per_device:
+            donor = int(np.argmax([len(s) for s in shards_idx]))
+            if len(shards_idx[donor]) <= min_per_device:
+                raise ValueError("not enough samples to give every device "
+                                 f"{min_per_device}")
+            shards_idx[m] = np.concatenate([shards_idx[m],
+                                            shards_idx[donor][-1:]])
+            shards_idx[donor] = shards_idx[donor][:-1]
+    out = []
+    for m in range(num_devices):
+        idx = shards_idx[m]
+        rng.shuffle(idx)
+        out.append((x[idx], y[idx]))
+    return out
+
+
+def stack_shards(shards, pad: bool = False):
+    """Stack shards into arrays with leading device axis [N, ...]
+    (rectangular, vmap-able across devices).
+
+    pad=False (default) truncates to the minimum shard size — lossless for
+    the ring protocol's equal shards, the historical behavior.  For
+    unequal shards (Dirichlet), pad=True rectangularizes to the LARGEST
+    shard by cyclic repetition of each shard's rows instead, so no sample
+    is discarded; repeated rows get proportionally higher weight under
+    the engine's uniform-with-replacement minibatch sampling (and under
+    full-batch means), which is the standard way to square off skewed
+    federated shards.
+    """
+    sizes = [len(s[1]) for s in shards]
+    n = max(sizes) if pad else min(sizes)
+
+    def fit(a):
+        if len(a) >= n:
+            return a[:n]
+        reps = -(-n // len(a))
+        return np.concatenate([a] * reps)[:n]
+
+    xs = np.stack([fit(s[0]) for s in shards])
+    ys = np.stack([fit(s[1]) for s in shards])
     return xs, ys

@@ -118,9 +118,9 @@ def _load_fleet_state(path: str, stacked, params_b, fading_state, keys_b,
     if mismatch:
         raise ValueError(f"checkpoint {path!r} does not match this fleet "
                          f"(saved vs running): {mismatch}")
-    state = ckpt.restore(path, _carry_tree(stacked, params_b, fading_state,
-                                           keys_b))
-    flat = ckpt.load_flat(path)
+    flat = ckpt.load_flat(path)          # one read serves carry + extras
+    state = ckpt.restore_flat(flat, _carry_tree(stacked, params_b,
+                                                fading_state, keys_b))
     traces = {kk[len("traces/"):]: v for kk, v in flat.items()
               if kk.startswith("traces/")}
     metric_chunks = [traces] if traces else []
@@ -273,3 +273,69 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                     evals=evals, names=names, seeds=seeds, wall=wall,
                     wall_compile=wall_compile, wall_exec=wall - wall_compile,
                     fading_state=fading_state, designs=designs)
+
+
+def _scheme_names(schemes) -> list:
+    if isinstance(schemes, (list, tuple)):
+        return [pc.name for pc in schemes]
+    return list(getattr(schemes, "names", (schemes.name,)))
+
+
+def resolve_task_bundle(task, run, *, task_data=None, params=None,
+                        eval_fn=None, seed=None, data_kw=None):
+    """Default resolution shared by every task-first entry point
+    (``run_fleet_task`` here, ``fl.server.run_fl_task``) so the
+    load-bearing conventions live in ONE place: run = task.run_config()
+    unless given, and seed = run.seed feeds BOTH build_data and the
+    param-init PRNGKey — the historical wiring the paper_mlp bit-identity
+    contract pins.  Returns (run, task_data, params, eval_fn)."""
+    run = run if run is not None else task.run_config()
+    seed = run.seed if seed is None else seed
+    td = task_data if task_data is not None \
+        else task.build_data(seed, **(data_kw or {}))
+    if params is None:
+        params = task.init_params(seed)
+    if eval_fn is None:
+        eval_fn = task.make_eval(td)
+    return run, td, params, eval_fn
+
+
+def run_fleet_task(task, schemes, gains: np.ndarray, run=None, *,
+                   task_data=None, params: Optional[PyTree] = None,
+                   eval_fn: Optional[Callable] = None, etas=None,
+                   seed: Optional[int] = None, data_kw: Optional[dict] = None,
+                   **driver_kw) -> FLResult:
+    """Task-first fleet entry point (DESIGN.md §Tasks).
+
+    ``task`` is any object honouring the ``repro.tasks.base.Task``
+    contract (duck-typed — the fl layer never imports the registry): the
+    workload's data / param-init / loss / eval and its preferred run
+    config all come from the bundle, so callers only supply the wireless
+    side (``schemes``, ``gains``) and placement/checkpoint knobs.
+
+    Defaults resolve exactly like the pre-task hand-wired path, so
+    ``paper_mlp`` through here is bit-identical to
+    ``run_fleet(mlp.mlp_loss, init_params(...), ...)``:
+
+    run        task.run_config() unless given.
+    seed       run.seed unless given — feeds BOTH build_data and the
+               param-init PRNGKey, the historical convention.
+    task_data  a pre-built TaskData (skip build_data — e.g. to share one
+               materialized dataset across placements or scheme grids).
+    params     explicit initial params (skip task.init_params).
+    eval_fn    explicit eval (else task.make_eval on the built data).
+    etas       per-scheme step sizes [K]; defaults to the task's
+               grid-searched ``scheme_etas`` with run.eta as fallback.
+    data_kw    extra kwargs for build_data (e.g. steps= for LM tasks).
+
+    Everything else (``seeds``, ``fading``, ``flat``, ``placement``,
+    ``checkpoint_path``, ``resume``, ``max_chunks``, ``log``) passes
+    through to :func:`run_fleet`.
+    """
+    run, td, params, eval_fn = resolve_task_bundle(
+        task, run, task_data=task_data, params=params, eval_fn=eval_fn,
+        seed=seed, data_kw=data_kw)
+    if etas is None:
+        etas = [task.eta_for(n, run.eta) for n in _scheme_names(schemes)]
+    return run_fleet(task.loss_fn, params, schemes, gains, td.train, run,
+                     eval_fn, etas=etas, **driver_kw)

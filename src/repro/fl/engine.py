@@ -294,3 +294,12 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     return driver.run_fleet(loss_fn, params, schemes, gains, data, run,
                             eval_fn, etas=etas, seeds=seeds, fading=fading,
                             flat=flat, log=log, **driver_kw)
+
+
+def run_fleet_task(task, schemes, gains: np.ndarray, run=None,
+                   **kw) -> FLResult:
+    """Task-first alias of ``run_fleet`` (DESIGN.md §Tasks): the workload's
+    loss/params/data/eval come from a ``repro.tasks`` bundle; delegates to
+    ``fl.driver.run_fleet_task`` (same keyword surface)."""
+    from repro.fl import driver  # deferred: driver imports this module
+    return driver.run_fleet_task(task, schemes, gains, run, **kw)

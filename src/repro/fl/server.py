@@ -144,6 +144,24 @@ def run_fl(loss_fn: Callable, params: PyTree, scheme: PowerControl,
     return res.params, _history_from_result(res, scheme.name, t0)
 
 
+def run_fl_task(task, scheme: PowerControl, gains: np.ndarray, run=None,
+                *, task_data=None, params: Optional[PyTree] = None,
+                eval_fn: Optional[Callable] = None,
+                seed: Optional[int] = None, data_kw: Optional[dict] = None,
+                **kw):
+    """Task-first single-run entry (DESIGN.md §Tasks): loss/params/data/
+    eval come from a ``repro.tasks`` bundle (duck-typed, like
+    ``fl.driver.run_fleet_task``); defaults resolve the same way —
+    run = task.run_config(), seed = run.seed feeding both build_data and
+    the init PRNGKey.  Returns (params, history) like :func:`run_fl`."""
+    from repro.fl.driver import resolve_task_bundle  # deferred: no cycle
+    run, td, params, eval_fn = resolve_task_bundle(
+        task, run, task_data=task_data, params=params, eval_fn=eval_fn,
+        seed=seed, data_kw=data_kw)
+    return run_fl(task.loss_fn, params, scheme, gains, td.train, run,
+                  eval_fn, **kw)
+
+
 # ---------------------------------------------------------------------------
 # The historical host loop, preserved as the benchmark baseline and the
 # equivalence oracle for the scan engine.

@@ -3,10 +3,13 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
         --steps 50 --scheme sca
 
-Runs the paper's OTA-FL SGD (launch/steps.make_train_step) on a synthetic
-token stream partitioned across FL clients.  On this CPU container use
---smoke (reduced config); on a real TPU mesh drop --smoke and the same code
-path pjit-shards across the production mesh.
+Runs the paper's OTA-FL SGD (launch/steps.make_train_step) on the
+``token_stream`` LM workload from the task registry (repro.tasks,
+DESIGN.md §Tasks): the model bundle, the non-iid vocab-band client shards
+and the held-out eval all come from the Task — no private data wiring
+here.  On this CPU container use --smoke (reduced config); on a real TPU
+mesh drop --smoke and the same code path pjit-shards across the
+production mesh.
 """
 from __future__ import annotations
 
@@ -21,33 +24,19 @@ import numpy as np
 
 from repro import configs
 from repro import distributed as dist
+from repro import tasks as task_registry
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import power_control as pcm
 from repro.core.channel import WirelessConfig, deploy
 from repro.core.theory import OTAParams
-from repro.data.synthetic import token_stream
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
-from repro.models.registry import build_bundle
-
-
-def make_batches(vocab: int, num_clients: int, per_client: int, seq: int,
-                 steps: int, seed: int = 0):
-    """Non-iid client shards: each client's stream uses a shifted vocab slice
-    (heterogeneity analogous to the paper's label split)."""
-    streams = []
-    for m in range(num_clients):
-        toks = token_stream(steps * per_client * (seq + 1), vocab,
-                            seed=seed * 1000 + m)
-        # rotate into a client-specific band to induce heterogeneity
-        band = vocab // max(num_clients, 1)
-        toks = (toks + m * band) % vocab
-        streams.append(toks.reshape(steps, per_client, seq + 1))
-    return np.stack(streams, axis=1)  # [steps, N, per_client, seq+1]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="token_stream",
+                    help="registered LM task (DESIGN.md §Tasks)")
     ap.add_argument("--arch", default="qwen1.5-0.5b",
                     choices=configs.ARCH_IDS)
     ap.add_argument("--scheme", default="sca", choices=pcm.SCHEMES)
@@ -66,18 +55,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = configs.get_config(args.arch)
-    if args.smoke:
-        over = {}
-        if args.d_model:
-            over.update(d_model=args.d_model,
-                        n_heads=max(4, args.d_model // 64),
-                        n_kv_heads=max(2, args.d_model // 128),
-                        d_ff=args.d_model * 3, vocab_size=8192)
-        if args.layers:
-            over["n_layers"] = args.layers
-        cfg = cfg.smoke(**over)
-    bundle = build_bundle(cfg, tp=1, dp=1)
+    try:
+        task = task_registry.get(
+            args.task, expect_runtime="steps", arch=args.arch,
+            smoke=args.smoke, d_model=args.d_model, n_layers=args.layers,
+            clients=args.clients, per_client_batch=args.per_client_batch,
+            seq=args.seq)
+    except (KeyError, ValueError) as e:
+        raise SystemExit(f"{e} (fleet tasks go through benchmarks/fig2.py "
+                         f"or examples/quickstart.py)")
+    bundle, cfg = task.aux["bundle"], task.aux["cfg"]
     print(f"arch={cfg.name} params={bundle.num_params / 1e6:.1f}M "
           f"clients={args.clients}")
 
@@ -95,9 +82,10 @@ def main(argv=None):
         bundle, scheme, dep.gains, steps_lib.TrainStepConfig(eta=args.eta))
     step = jax.jit(step, donate_argnums=(0,))
 
-    params = bundle.init(jax.random.PRNGKey(args.seed))
-    data = make_batches(cfg.vocab_size, args.clients, args.per_client_batch,
-                        args.seq, args.steps, args.seed)
+    params = task.init_params(args.seed)
+    td = task.build_data(args.seed, steps=args.steps)
+    data = td.train
+    eval_fn = jax.jit(task.make_eval(td))
     key = jax.random.PRNGKey(args.seed + 1)
     losses = []
     t0 = time.time()
@@ -117,8 +105,9 @@ def main(argv=None):
                   meta={"arch": cfg.name, "steps": args.steps,
                         "scheme": args.scheme, "final_loss": losses[-1]})
         print("checkpoint saved to", args.checkpoint)
+    held_out = float(eval_fn(params)["loss"])
     print(f"final_loss={losses[-1]:.4f} first_loss={losses[0]:.4f} "
-          f"improved={losses[-1] < losses[0]}")
+          f"held_out_loss={held_out:.4f} improved={losses[-1] < losses[0]}")
     return losses
 
 

@@ -1,0 +1,23 @@
+"""repro.tasks — pluggable FL workloads (DESIGN.md §Tasks).
+
+    from repro import tasks
+    task = tasks.get("cifar_conv")          # or "paper_mlp" / "token_stream"
+    td = task.build_data(seed=0)
+    res = run_fleet_task(task, schemes, gains, task.run_config())
+
+Built-in tasks register here; a new workload plugs in by calling
+``tasks.register(name, factory)`` with a factory returning a
+:class:`~repro.tasks.base.Task`.
+"""
+from repro.tasks.base import Task, TaskData
+from repro.tasks.registry import get, names, register
+
+from repro.tasks.image import make_cifar_conv, make_paper_mlp
+from repro.tasks.lm import make_token_stream
+
+register("paper_mlp", make_paper_mlp)
+register("cifar_conv", make_cifar_conv)
+register("token_stream", make_token_stream, runtime="steps")
+
+__all__ = ["Task", "TaskData", "get", "names", "register",
+           "make_paper_mlp", "make_cifar_conv", "make_token_stream"]

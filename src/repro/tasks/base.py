@@ -1,0 +1,109 @@
+"""The Task bundle: one FL workload as data x model x eval (DESIGN.md §Tasks).
+
+The paper runs ONE experiment — a synthetic MNIST-like MLP — but nothing in
+the bias-variance machinery is workload-specific: the fleet engine consumes
+a ``(loss_fn, params, data, run, eval_fn)`` bundle and the OTA math only
+needs the parameter dimension ``d``.  A :class:`Task` packages that bundle
+behind a stable contract so benchmarks, examples and the fleet executor's
+task-first entry points (``fl.driver.run_fleet_task``) never hand-wire a
+workload again:
+
+    dataset builder     ``build_data(seed, **kw) -> TaskData`` — fully
+                        deterministic in ``seed`` (synthetic, no downloads)
+    non-iid partitioner baked into ``build_data`` (ring protocol for the
+                        paper task, Dirichlet(α) for cifar_conv, vocab-band
+                        rotation for the LM task)
+    param init          ``init_params(seed)`` = the task's ParamDef tree
+                        materialized from ``jax.random.PRNGKey(seed)``
+    loss_fn             ``loss_fn(params, batch) -> scalar`` — pure jnp,
+                        jit/vmap/grad-safe (the engine differentiates it
+                        inside a scanned, vmapped round body)
+    eval_fn             ``make_eval(td)(params) -> {name: scalar}``
+    RunConfig defaults  ``run_config(**overrides) -> fl.server.FLRunConfig``
+                        plus per-scheme step sizes (``eta_for``)
+
+Tasks are looked up by name through ``repro.tasks.get`` (see registry.py).
+The ``paper_mlp`` task through ``run_fleet_task`` is bit-identical to the
+pre-task hand-wired path (same key streams, same params — regression-tested
+in tests/test_tasks.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskData:
+    """A materialized workload instance (one ``build_data(seed)`` call).
+
+    train   what the task's runtime consumes: for fleet tasks the stacked
+            per-device arrays (x [N, D, ...], y [N, D]) that
+            ``run_fleet`` takes as ``data``; the LM task stacks per-step
+            client batches [steps, N, per_client, seq+1] instead.
+    test    held-out arrays for evaluation (host-resident).
+    extras  task-specific payloads (e.g. the global-loss subsample).
+    """
+    train: Any
+    test: Any = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One pluggable FL workload; see the module docstring for the contract.
+
+    The underscored callables are the raw builders a factory wires in;
+    consumers go through the public methods, which fix the seed/key
+    conventions (init key = PRNGKey(seed), the same convention the
+    pre-task benchmarks used — load-bearing for bit-identity).
+    """
+    name: str
+    num_devices: int
+    param_dim: int                       # d in the paper's OTA math
+    loss_fn: Callable                    # (params, batch) -> scalar
+    defaults: dict                       # FLRunConfig kwargs
+    _build_data: Callable                # (seed, **kw) -> TaskData
+    _init_fn: Callable                   # (key) -> params pytree
+    _make_eval: Callable                 # (TaskData) -> eval_fn | None
+    scheme_etas: dict = dataclasses.field(default_factory=dict)
+    artifact_tag: str = ""               # experiments/<tag>/ for benchmarks
+    # which runtime consumes the bundle: "fleet" tasks stack (x, y) device
+    # shards for run_fleet_task; "steps" tasks (the LM workload) feed the
+    # pjit train step in launch/train.py — the CLIs guard on this so a
+    # mismatched --task fails with a clear message, not deep in the engine
+    runtime: str = "fleet"
+    _sample_batch: Optional[Callable] = None   # (TaskData) -> loss-ready batch
+    aux: dict = dataclasses.field(default_factory=dict)
+
+    def build_data(self, seed: int = 0, **kw) -> TaskData:
+        return self._build_data(seed, **kw)
+
+    def init_params(self, seed: int = 0) -> PyTree:
+        return self._init_fn(jax.random.PRNGKey(seed))
+
+    def make_eval(self, td: TaskData):
+        return self._make_eval(td)
+
+    def run_config(self, **overrides):
+        """The task's preferred FLRunConfig, with per-call overrides."""
+        from repro.fl.server import FLRunConfig  # fl never imports tasks
+        kw = dict(self.defaults)
+        kw.update(overrides)
+        return FLRunConfig(**kw)
+
+    def eta_for(self, scheme_name: str, default: float) -> float:
+        """Per-scheme step size (grid-searched once per task, as in the
+        paper); schemes without an entry fall back to ``default``."""
+        return float(self.scheme_etas.get(scheme_name, default))
+
+    def sample_batch(self, td: TaskData):
+        """One loss_fn-ready batch from built data (registry smoke tests)."""
+        if self._sample_batch is not None:
+            return self._sample_batch(td)
+        x_dev, y_dev = td.train
+        return x_dev[0], y_dev[0]

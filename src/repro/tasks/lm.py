@@ -1,0 +1,79 @@
+"""The token_stream LM task: synthetic-corpus FL language modelling.
+
+Wraps a transformer ModelBundle (models.registry) plus the non-iid client
+sharding that ``launch/train.py`` used to hand-roll: each client's Zipf
+token stream is rotated into a client-specific vocab band — heterogeneity
+analogous to the paper's label split.  The bundle itself rides in
+``task.aux["bundle"]`` for runtimes that need more than loss/init (the
+pjit train step builds against it).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import configs
+from repro.data.synthetic import token_stream
+from repro.models.registry import build_bundle
+from repro.tasks.base import Task, TaskData
+
+
+def client_batches(vocab: int, num_clients: int, per_client: int, seq: int,
+                   steps: int, seed: int = 0) -> np.ndarray:
+    """Non-iid client shards [steps, N, per_client, seq+1]: each client's
+    stream uses a shifted vocab slice (the band rotation previously wired
+    privately inside launch/train.py)."""
+    streams = []
+    for m in range(num_clients):
+        toks = token_stream(steps * per_client * (seq + 1), vocab,
+                            seed=seed * 1000 + m)
+        band = vocab // max(num_clients, 1)
+        toks = (toks + m * band) % vocab
+        streams.append(toks.reshape(steps, per_client, seq + 1))
+    return np.stack(streams, axis=1)
+
+
+def make_token_stream(arch: str = "qwen1.5-0.5b", smoke: bool = True,
+                      d_model: int = 64, n_layers: int = 2,
+                      clients: int = 4, per_client_batch: int = 1,
+                      seq: int = 32) -> Task:
+    """LM task factory.  Defaults are CPU-tiny (registry smoke scale);
+    ``launch/train.py`` passes its CLI sizes through.  ``d_model=0`` /
+    ``n_layers=0`` keep the arch's own smoke dimensions."""
+    cfg = configs.get_config(arch)
+    if smoke:
+        over = {}
+        if d_model:
+            over.update(d_model=d_model, n_heads=max(4, d_model // 64),
+                        n_kv_heads=max(2, d_model // 128),
+                        d_ff=d_model * 3, vocab_size=8192)
+        if n_layers:
+            over["n_layers"] = n_layers
+        cfg = cfg.smoke(**over)
+    bundle = build_bundle(cfg, tp=1, dp=1)
+
+    def build(seed: int = 0, steps: int = 8) -> TaskData:
+        # one extra step's worth of tokens becomes the held-out eval batch
+        data = client_batches(cfg.vocab_size, clients, per_client_batch,
+                              seq, steps + 1, seed)
+        test = data[-1].reshape(-1, seq + 1)
+        return TaskData(train=data[:steps], test=test,
+                        extras={"steps": steps})
+
+    def make_eval(td: TaskData):
+        import jax.numpy as jnp
+        test = jnp.asarray(td.test)
+        return lambda params: {"loss": bundle.loss(params, test)}
+
+    def sample_batch(td: TaskData):
+        import jax.numpy as jnp
+        return jnp.asarray(td.train[0].reshape(-1, seq + 1))
+
+    return Task(
+        name="token_stream", num_devices=clients,
+        param_dim=bundle.num_params,
+        loss_fn=lambda params, batch: bundle.loss(params, batch),
+        defaults=dict(eta=0.05, num_rounds=50, eval_every=10, gmax=10.0,
+                      batch_size=0),
+        artifact_tag="lm", runtime="steps", _build_data=build,
+        _init_fn=bundle.init, _make_eval=make_eval,
+        _sample_batch=sample_batch, aux={"bundle": bundle, "cfg": cfg})

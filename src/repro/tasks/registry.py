@@ -1,0 +1,57 @@
+"""String registry of Task factories (DESIGN.md §Tasks).
+
+Factories, not instances: ``get("cifar_conv", samples_per_class=20)``
+builds a fresh Task with the overrides applied, so tests and smoke runs
+can shrink a workload without a parallel config system.  Building a Task
+is cheap (ParamDef trees only); data materializes at ``build_data``.
+
+Each registration records which runtime consumes the bundle ("fleet" for
+run_fleet_task workloads, "steps" for the LM/pjit train driver) so CLIs
+can list only the tasks they can actually run, without building any.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.tasks.base import Task
+
+_FACTORIES: Dict[str, Tuple[Callable[..., Task], str]] = {}
+
+
+def register(name: str, factory: Callable[..., Task],
+             runtime: str = "fleet") -> None:
+    if name in _FACTORIES:
+        raise ValueError(f"task {name!r} already registered")
+    _FACTORIES[name] = (factory, runtime)
+
+
+def get(name: str, *, expect_runtime: Optional[str] = None,
+        **overrides) -> Task:
+    """Build the named task, passing ``overrides`` to its factory.
+
+    ``expect_runtime`` is the one shared guard for runtime-specific
+    consumers (fleet CLIs, the LM train driver): it is checked against
+    the REGISTERED runtime before the factory runs, so a mismatched
+    ``--task`` fails with this message rather than a factory TypeError
+    on runtime-specific overrides.
+    """
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown task {name!r}; available: {names()}")
+    factory, runtime = _FACTORIES[name]
+    if expect_runtime is not None and runtime != expect_runtime:
+        raise ValueError(
+            f"task {name!r} is a {runtime!r}-runtime workload; this "
+            f"consumer needs one of {names(runtime=expect_runtime)}")
+    task = factory(**overrides)
+    if task.name != name:
+        raise ValueError(f"factory for {name!r} built task {task.name!r}")
+    if task.runtime != runtime:
+        raise ValueError(f"task {name!r} declares runtime "
+                         f"{task.runtime!r} but registered as {runtime!r}")
+    return task
+
+
+def names(runtime: Optional[str] = None) -> tuple:
+    """Registered task names, optionally only those a runtime can consume."""
+    return tuple(sorted(n for n, (_, rt) in _FACTORIES.items()
+                        if runtime is None or rt == runtime))

@@ -1,0 +1,149 @@
+"""Property tests for the non-iid partitioners (data/partition.py).
+
+Ring protocol: the paper's N=10 bipartite matching, exactly.
+Dirichlet(α): sample conservation, per-device minimums, and the
+α-concentration law — per-device label histograms approach the global
+histogram monotonically as α grows.  Properties are checked over
+deterministic parameter grids (no optional deps) so this file runs in
+the tier-1 suite everywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.data import partition, synthetic
+
+
+def _toy_labels(samples_per_class: int, num_classes: int = 10):
+    y = np.repeat(np.arange(num_classes, dtype=np.int64), samples_per_class)
+    x = np.arange(len(y), dtype=np.float32)[:, None]   # distinct rows
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Ring protocol (paper §IV)
+# ---------------------------------------------------------------------------
+
+def test_ring_matches_paper_n10_matching_exactly():
+    """N=10, 2 labels/device, <= 2 devices/label: device m <- {m, m+1 mod 10}
+    — the exact matching of the paper, not just any feasible assignment."""
+    assign = partition.label_assignment(10, 10, labels_per_device=2,
+                                        max_devices_per_label=2)
+    assert assign == [tuple(((m + j) % 10) for j in range(2))
+                      for m in range(10)]
+    counts = np.zeros(10, int)
+    for labs in assign:
+        for l in labs:
+            counts[l] += 1
+    assert counts.max() == counts.min() == 2
+
+
+@pytest.mark.parametrize("n_dev,lpd", [(2, 1), (3, 2), (5, 2), (7, 1),
+                                       (10, 2)])
+def test_ring_partition_conserves_and_respects_ownership(n_dev, lpd):
+    """Every sample of an *owned* label lands on exactly one device (labels
+    no device owns — possible when n_dev * lpd < num_classes — contribute
+    nothing), and each device only holds its assigned labels."""
+    x, y = _toy_labels(8)
+    cap = max(2, (n_dev * lpd + 9) // 10)
+    shards = partition.partition_by_label(x, y, n_dev, labels_per_device=lpd,
+                                          max_devices_per_label=cap, seed=1)
+    assign = partition.label_assignment(n_dev, 10, lpd, cap)
+    owned = {l for labs in assign for l in labs}
+    seen = np.concatenate([s[0][:, 0] for s in shards])
+    n_owned = int(np.isin(y, sorted(owned)).sum())
+    assert len(seen) == n_owned
+    assert len(np.unique(seen)) == n_owned         # exactly once each
+    for m, (_, ym) in enumerate(shards):
+        assert set(np.unique(ym)) <= set(assign[m])
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet(α)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha,n_dev,seed",
+                         [(0.05, 2, 0), (0.05, 16, 7), (0.3, 10, 3),
+                          (1.0, 5, 11), (5.0, 8, 42), (50.0, 13, 99)])
+def test_dirichlet_conserves_samples(alpha, n_dev, seed):
+    x, y = _toy_labels(30)
+    shards = partition.partition_dirichlet(x, y, n_dev, alpha=alpha,
+                                           seed=seed)
+    assert len(shards) == n_dev
+    seen = np.concatenate([s[0][:, 0] for s in shards])
+    assert len(seen) == len(y)                     # conserved ...
+    assert len(np.unique(seen)) == len(y)          # ... and disjoint
+    assert all(len(s[1]) >= 1 for s in shards)     # min_per_device repair
+    for xm, ym in shards:
+        # labels still match their samples after the shuffles
+        assert np.array_equal(y[xm[:, 0].astype(int)], ym)
+
+
+def _heterogeneity(alpha: float, n_dev: int = 10, seeds=range(6)) -> float:
+    """Mean total-variation distance between per-device label histograms
+    and the global histogram, averaged over partition seeds."""
+    x, y = _toy_labels(100)
+    num_classes = int(y.max()) + 1
+    global_hist = np.bincount(y, minlength=num_classes) / len(y)
+    tvs = []
+    for seed in seeds:
+        shards = partition.partition_dirichlet(x, y, n_dev, alpha=alpha,
+                                               seed=seed)
+        for _, ym in shards:
+            hist = np.bincount(ym, minlength=num_classes) / max(len(ym), 1)
+            tvs.append(0.5 * np.abs(hist - global_hist).sum())
+    return float(np.mean(tvs))
+
+
+def test_dirichlet_alpha_concentration_monotone():
+    """Heterogeneity (TV to the global label law) decreases monotonically
+    along a well-separated α ladder: small α = strong label skew, large α
+    recovers the i.i.d. split."""
+    ladder = [0.05, 0.3, 2.0, 20.0, 200.0]
+    het = [_heterogeneity(a) for a in ladder]
+    assert all(a > b for a, b in zip(het, het[1:])), het
+    assert het[0] > 0.5          # strong skew at α = 0.05
+    assert het[-1] < 0.1         # near-iid at α = 200
+
+
+def test_dirichlet_min_per_device_infeasible_raises():
+    x, y = _toy_labels(1, num_classes=2)     # 2 samples, 8 devices
+    with pytest.raises(ValueError, match="not enough samples"):
+        partition.partition_dirichlet(x, y, 8, alpha=1.0, seed=0,
+                                      min_per_device=2)
+
+
+def test_dirichlet_invalid_alpha_raises():
+    x, y = _toy_labels(4)
+    with pytest.raises(ValueError, match="alpha"):
+        partition.partition_dirichlet(x, y, 4, alpha=0.0)
+
+
+def test_dirichlet_stacks_for_fleet():
+    """The Dirichlet shards rectangularize through stack_shards like the
+    ring shards do (the fleet engine needs [N, D, ...] arrays)."""
+    x, y, _, _ = synthetic.cifar_like(20, seed=0, test_per_class=5)
+    shards = partition.partition_dirichlet(x, y, 10, alpha=0.5, seed=0)
+    xd, yd = partition.stack_shards(shards)
+    assert xd.shape[0] == 10 and xd.shape[2:] == (32, 32, 3)
+    assert yd.shape == xd.shape[:2]
+    assert xd.shape[1] == min(len(s[1]) for s in shards)
+
+
+def test_stack_shards_pad_keeps_every_sample():
+    """pad=True rectangularizes to the LARGEST shard by cyclic repetition:
+    every original sample survives (no Dirichlet truncation loss), padded
+    rows are exact repeats, and labels stay aligned with their samples."""
+    x, y = _toy_labels(40)
+    shards = partition.partition_dirichlet(x, y, 10, alpha=0.3, seed=5)
+    sizes = [len(s[1]) for s in shards]
+    xd, yd = partition.stack_shards(shards, pad=True)
+    assert xd.shape[1] == max(sizes)
+    for m, (xm, ym) in enumerate(shards):
+        # the first len(shard) rows are the shard itself ...
+        assert np.array_equal(xd[m, :len(ym), 0], xm[:, 0])
+        # ... so no sample is lost, and the tail is cyclic repetition
+        assert set(xd[m, :, 0]) == set(xm[:, 0])
+        assert np.array_equal(y[xd[m, :, 0].astype(int)], yd[m])
+    # default (truncating) behavior is unchanged
+    xt, _ = partition.stack_shards(shards)
+    assert xt.shape[1] == min(sizes)
