@@ -4,6 +4,7 @@ and global loss (2b) vs FL rounds for all seven schemes.
     PYTHONPATH=src python -m benchmarks.fig2 [--task paper_mlp|cifar_conv]
         [--bench] [--bench-placement] [--sharded] [--rounds N]
         [--checkpoint] [--resume]
+        [--population P --cohort N [--cohort-rounds R] [--no-stream]]
 
 The workload comes from the task registry (``repro.tasks``, DESIGN.md
 §Tasks): ``paper_mlp`` (default) is the paper's §IV experiment and stays
@@ -14,11 +15,21 @@ experiments/cifar/.  All seven schemes run as ONE compiled scan program
 the ("data", "model") debug mesh and ``--checkpoint`` / ``--resume`` turn
 on chunk-boundary checkpointing with mid-grid resume.
 
+``--population P`` switches the fleet to the streaming-cohort serving loop
+(DESIGN.md §Population): each round runs on a ``--cohort``-sized draw from
+a P-device parametric population (traffic-weighted Gumbel-top-k sampling),
+redrawn every ``--cohort-rounds`` rounds, with the next cohort's draw /
+gain materialization / SCA redesign double-buffered against the executing
+chunk (``--no-stream`` serializes the same stages — identical numbers).
+
 ``--bench`` records the engine-vs-legacy wall-clock comparison into
 <artifacts>/engine_benchmark.json.  ``--bench-placement`` (also implied by
 ``--bench``) adds the placement-vs-placement comparison — vmap vs sharded
 at growing K*S — and refreshes the repo-root ``BENCH_engine.json`` summary
-(headline walls + speedups, machine-readable across PRs).
+(headline walls + speedups, machine-readable across PRs; shape pinned by
+``benchmarks/bench_schema.json`` via ``benchmarks.validate_bench``).
+``--bench`` also runs :func:`population_benchmark` — sustained rounds/sec
+of the 1M-population / 50-cohort streaming loop, stream vs serial.
 
 Claims validated (paper §IV):
   * Ideal FedAvg best everywhere.
@@ -38,7 +49,7 @@ import jax
 import numpy as np
 
 from repro import tasks
-from repro.core import channel, power_control as pcm
+from repro.core import channel, power_control as pcm, scenarios as scn
 from repro.core.theory import OTAParams
 from repro.fl.driver import run_fleet_task
 from repro.fl.server import run_fl_legacy
@@ -70,23 +81,37 @@ def artifact_dir(task) -> str:
     return os.path.join(ROOT, "experiments", task.artifact_tag or task.name)
 
 
-def build_world(task="paper_mlp", seed: int = 0):
+def build_world(task="paper_mlp", seed: int = 0, num_devices=None):
     """Wireless deployment + OTA design constants + materialized task data.
 
     The deployment geometry is seeded independently of the data seed (the
     paper fixes one wireless world across data seeds), matching the
     committed pre-task fig2 world bit-for-bit on ``paper_mlp``.
+    ``num_devices`` overrides the task's device count — population runs
+    design their schemes for a cohort-sized world, not the shard count.
     """
     task = _task(task)
-    wcfg = channel.WirelessConfig(num_devices=task.num_devices, seed=0)
+    wcfg = channel.WirelessConfig(
+        num_devices=num_devices or task.num_devices, seed=0)
     dep = channel.deploy(wcfg)
     td = task.build_data(seed)
     prm = OTAParams(d=task.param_dim,
                     gmax=float(task.defaults.get("gmax", 10.0)),
                     es=wcfg.energy_per_sample, n0=wcfg.noise_psd,
-                    gains=dep.gains, sigma_sq=np.zeros(task.num_devices),
+                    gains=dep.gains, sigma_sq=np.zeros(wcfg.num_devices),
                     eta=0.05, lsmooth=1.0, kappa_sq=4.0)
     return dep, prm, td
+
+
+def make_population(size: int, sampling: str = "traffic",
+                    seed: int = 0) -> scn.Population:
+    """Parametric serving population for --population runs: disk geometry
+    with log-normal shadowing, i.i.d. Rayleigh fading (the engine's
+    fading=None fast path) and heavy-tailed traffic-weighted cohort draws.
+    Lazy — 1M devices cost nothing until a cohort materializes them."""
+    spec = scn.PopulationSpec(size=size, shadowing=scn.ShadowingSpec(),
+                              sampling=sampling, seed=seed)
+    return scn.Population(spec=spec)
 
 
 def make_schemes(task: Task, dep, prm, names=SCHEMES) -> list:
@@ -118,7 +143,9 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         schemes=SCHEMES, log=False, engine: str = "fleet",
         batch_size=0, save: bool = True, placement=None,
         with_result: bool = False, task="paper_mlp",
-        checkpoint_path=None, resume: bool = False):
+        checkpoint_path=None, resume: bool = False,
+        population: int = 0, cohort=None, cohort_rounds=None,
+        stream: bool = True, max_chunks=None):
     """Fig.-2-style histories for all schemes on the given task.
 
     engine="fleet": one compiled scan program for the whole scheme grid,
@@ -134,13 +161,25 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
     the fleet matches the legacy loop to float rounding); None takes the
     task's preferred batch size; batch_size>0 switches to on-device
     minibatch sampling and the flattened Pallas aggregation.
+    population>0 runs the fleet in streaming-cohort mode (``cohort``
+    devices per round drawn from a ``make_population(population)`` world,
+    schemes designed for the cohort-sized deployment; see module
+    docstring); cohort defaults to the task's device count.
     with_result=True also returns the driver's FLResult (the honest
     wall_compile/wall_exec split for --bench).
     """
     task = _task(task)
     if batch_size is None:
         batch_size = int(task.defaults.get("batch_size", 0))
-    dep, prm, td = build_world(task, seed)
+    pop_kw = {}
+    if population:
+        if engine != "fleet":
+            raise ValueError("population mode needs the fleet engine")
+        cohort = int(cohort or task.num_devices)
+        pop_kw = dict(population=make_population(int(population)),
+                      cohort_size=cohort, cohort_rounds=cohort_rounds,
+                      stream=stream)
+    dep, prm, td = build_world(task, seed, num_devices=cohort)
     params0 = task.init_params(seed)
     evals = task.make_eval(td)
 
@@ -154,7 +193,8 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
                              params=params0, eval_fn=evals,
                              flat=batch_size > 0, log=log,
                              placement=placement,
-                             checkpoint_path=checkpoint_path, resume=resume)
+                             checkpoint_path=checkpoint_path, resume=resume,
+                             max_chunks=max_chunks, **pop_kw)
         histories = _fleet_histories(res, res.wall)
     elif engine == "legacy":
         histories = {}
@@ -377,6 +417,100 @@ def placement_benchmark(task="paper_mlp", num_rounds: int = 30,
     return placement
 
 
+def population_benchmark(task="paper_mlp", size: int = 1_000_000,
+                         cohort: int = 50, num_rounds: int = 48,
+                         eval_every: int = 16, cohort_rounds: int = 1,
+                         seed: int = 0, batch_size: int = BENCH_BATCH,
+                         log: bool = True) -> dict:
+    """Streaming-cohort serving throughput (DESIGN.md §Population).
+
+    One ``adaptive_sca`` scheme over a ``size``-device traffic-weighted
+    population at ``cohort`` devices/round, redrawn + SCA-redesigned on the
+    incoming cohort's statistical CSI every ``cohort_rounds`` rounds (the
+    default redraws EVERY round — the hardest streaming cadence).  The
+    same fleet runs twice — stream=True (staging double-buffered against
+    the executing chunk) and stream=False (identical stages, serialized) —
+    so the exec-wall gap IS the hidden staging + redesign latency; results
+    are checked bitwise-equal across the two modes.  Run with at least two
+    visible devices (CI forces host devices via XLA_FLAGS) so the driver's
+    staging lane keeps the redesign solve off the chunk's device — on one
+    device the solve queues behind the chunk and overlap cannot win.
+    Also re-verifies the full-participation contract: a cohort ==
+    population run over the task's own deployment is bitwise the
+    pre-population engine path.
+
+    Records sustained rounds/sec (stream mode, compile excluded) into
+    <artifacts>/engine_benchmark.json under "population" and refreshes
+    BENCH_engine.json.
+    """
+    task = _task(task)
+    pop = make_population(size)
+    dep, prm, td = build_world(task, seed, num_devices=cohort)
+    params0 = task.init_params(seed)
+    evals = task.make_eval(td)
+    pcs = make_schemes(task, dep, prm, ["adaptive_sca"])
+    run_cfg = task.run_config(num_rounds=num_rounds, eval_every=eval_every,
+                              seed=seed, batch_size=batch_size)
+    kw = dict(task_data=td, params=params0, eval_fn=evals,
+              flat=batch_size > 0, population=pop, cohort_size=cohort,
+              cohort_rounds=cohort_rounds)
+    res_st = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw, stream=True)
+    res_se = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw,
+                            stream=False)
+    stream_eq = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(res_st.params),
+                        jax.tree.leaves(res_se.params)))
+    if log:
+        print(f"population {size} / cohort {cohort}: "
+              f"stream exec {res_st.wall_exec:.1f}s "
+              f"(staged {res_st.wall_stage:.1f}s overlapped), "
+              f"serial exec {res_se.wall_exec:.1f}s")
+
+    # full-participation identity: deployment-as-population, cohort == N
+    dep0, prm0, _ = build_world(task, seed)
+    pcs0 = make_schemes(task, dep0, prm0, ["sca"])
+    run0 = task.run_config(num_rounds=6, eval_every=3, seed=seed,
+                           batch_size=batch_size)
+    kw0 = dict(task_data=td, params=params0, eval_fn=evals,
+               flat=batch_size > 0)
+    ref = run_fleet_task(task, pcs0, dep0.gains, run0, **kw0)
+    full = run_fleet_task(task, pcs0, dep0.gains, run0, **kw0,
+                          population=scn.Population.from_deployment(dep0),
+                          cohort_size=task.num_devices, stream=False)
+    full_bitwise = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(full.params))) \
+        and all(np.array_equal(ref.traces[k], full.traces[k])
+                for k in ref.traces)
+
+    report = {
+        "config": {"task": task.name, "population": size, "cohort": cohort,
+                   "num_rounds": num_rounds, "eval_every": eval_every,
+                   "cohort_rounds": cohort_rounds, "seed": seed,
+                   "batch_size": batch_size, "scheme": "adaptive_sca",
+                   "sampling": "traffic", "backend": jax.default_backend()},
+        "wall_s": {"stream_exec": round(res_st.wall_exec, 2),
+                   "serial_exec": round(res_se.wall_exec, 2),
+                   "stream_stage": round(res_st.wall_stage, 2),
+                   "serial_stage": round(res_se.wall_stage, 2),
+                   "stream_compile": round(res_st.wall_compile, 2)},
+        "rounds_per_sec": round(num_rounds / max(res_st.wall_exec, 1e-9), 3),
+        "overlap_saving_s": round(res_se.wall_exec - res_st.wall_exec, 2),
+        "stream_bitwise": bool(stream_eq),
+        "full_cohort_bitwise": bool(full_bitwise),
+    }
+    _merge_benchmark_json(task, {"population": report})
+    write_bench_summary(task)
+    if log:
+        print(json.dumps({k: report[k] for k in
+                          ("rounds_per_sec", "overlap_saving_s",
+                           "stream_bitwise", "full_cohort_bitwise")},
+                         indent=1))
+    return report
+
+
 def _benchmark_json_path(task) -> str:
     return os.path.join(artifact_dir(task), "engine_benchmark.json")
 
@@ -434,8 +568,15 @@ def write_bench_summary(task="paper_mlp") -> dict:
                          {"sharded": "skipped"})}
                      for r in pl["rows"]],
         }
+    if "population" in report:
+        summary["population"] = report["population"]
     with open(BENCH_SUMMARY, "w") as f:
         json.dump(summary, f, indent=1)
+    from benchmarks.validate_bench import validate
+    errors = validate(BENCH_SUMMARY)
+    if errors:
+        raise ValueError(f"BENCH_engine.json violates "
+                         f"benchmarks/bench_schema.json: {errors}")
     return summary
 
 
@@ -475,6 +616,22 @@ def main(argv=None) -> None:
     ap.add_argument("--resume", action="store_true",
                     help="fast-forward from the task's checkpoint if present"
                          " (implies --checkpoint)")
+    ap.add_argument("--max-chunks", type=int, default=None,
+                    help="stop after N compiled chunks (with --checkpoint: "
+                         "a clean mid-run kill the next --resume completes)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="streaming-cohort mode: population size (devices); "
+                         "0 = full participation (DESIGN.md §Population)")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="active devices per round under --population "
+                         "(default: the task's device count)")
+    ap.add_argument("--cohort-rounds", type=int, default=None,
+                    help="redraw the cohort every R rounds (default: once "
+                         "per chunk, i.e. the eval cadence)")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="serialize cohort staging instead of double-"
+                         "buffering it against the executing chunk "
+                         "(identical numbers, different walls)")
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--every", type=int, default=None,
                     help="eval cadence (default: 10, or 15 under --bench)")
@@ -495,6 +652,9 @@ def main(argv=None) -> None:
             and (args.legacy or args.bench or args.bench_placement):
         raise SystemExit("--checkpoint/--resume apply to the fleet engine "
                          "only; drop --legacy/--bench/--bench-placement")
+    if args.population and (args.legacy or args.sharded):
+        raise SystemExit("--population applies to the vmap fleet engine; "
+                         "drop --legacy/--sharded")
     if args.bench:
         benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
                   seed=args.seed, task=task,
@@ -502,6 +662,10 @@ def main(argv=None) -> None:
         placement_benchmark(task=task, num_rounds=min(args.rounds, 30),
                             eval_every=args.every or 15, seed=args.seed,
                             batch_size=args.batch_size or BENCH_BATCH)
+        population_benchmark(task=task,
+                             size=args.population or 1_000_000,
+                             cohort=args.cohort or 50, seed=args.seed,
+                             batch_size=args.batch_size or BENCH_BATCH)
         return
     if args.bench_placement:
         placement_benchmark(task=task, num_rounds=min(args.rounds, 30),
@@ -517,7 +681,10 @@ def main(argv=None) -> None:
                engine="legacy" if args.legacy else "fleet",
                batch_size=args.batch_size, log=True,
                placement=_sharded_placement() if args.sharded else None,
-               checkpoint_path=ckpt_path, resume=args.resume)
+               checkpoint_path=ckpt_path, resume=args.resume,
+               population=args.population, cohort=args.cohort,
+               cohort_rounds=args.cohort_rounds,
+               stream=not args.no_stream, max_chunks=args.max_chunks)
     for row in summarize(hist):
         print(row)
 

@@ -1,0 +1,103 @@
+"""Validate the repo-root BENCH_engine.json against bench_schema.json.
+
+    PYTHONPATH=src python -m benchmarks.validate_bench [path]
+
+The summary is the machine-readable perf trajectory diffed across PRs, so
+its SHAPE is a contract: the CI `population-smoke` job runs this module
+against the committed file, and ``fig2.write_bench_summary`` runs it on
+every rewrite (a bench refresh that breaks the schema fails loudly at
+write time, not at the next PR's diff).
+
+Uses ``jsonschema`` when importable; otherwise falls back to a minimal
+built-in checker covering the subset the schema actually uses (type,
+required, properties, additionalProperties, items, minimum /
+exclusiveMinimum, minItems) — no new dependencies either way.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DEFAULT_SUMMARY = os.path.join(ROOT, "BENCH_engine.json")
+SCHEMA = os.path.join(os.path.dirname(__file__), "bench_schema.json")
+
+_TYPES = {"object": dict, "array": list, "string": str, "boolean": bool,
+          "integer": int, "number": (int, float)}
+
+
+def _check(obj, schema: dict, path: str, errors: list) -> None:
+    """Minimal recursive draft-07 subset checker (fallback path)."""
+    typ = schema.get("type")
+    if typ is not None:
+        pytype = _TYPES[typ]
+        ok = isinstance(obj, pytype)
+        if typ in ("integer", "number") and isinstance(obj, bool):
+            ok = False
+        if not ok:
+            errors.append(f"{path or '$'}: expected {typ}, "
+                          f"got {type(obj).__name__}")
+            return
+    if isinstance(obj, dict):
+        for req in schema.get("required", ()):
+            if req not in obj:
+                errors.append(f"{path or '$'}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties", True)
+        for key, val in obj.items():
+            if key in props:
+                _check(val, props[key], f"{path}/{key}", errors)
+            elif isinstance(extra, dict):
+                _check(val, extra, f"{path}/{key}", errors)
+            elif extra is False:
+                errors.append(f"{path or '$'}: unexpected key {key!r}")
+    elif isinstance(obj, list):
+        if len(obj) < schema.get("minItems", 0):
+            errors.append(f"{path or '$'}: fewer than "
+                          f"{schema['minItems']} items")
+        items = schema.get("items")
+        if items is not None:
+            for i, val in enumerate(obj):
+                _check(val, items, f"{path}/{i}", errors)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        if "minimum" in schema and obj < schema["minimum"]:
+            errors.append(f"{path or '$'}: {obj} < min {schema['minimum']}")
+        if "exclusiveMinimum" in schema \
+                and obj <= schema["exclusiveMinimum"]:
+            errors.append(f"{path or '$'}: {obj} <= exclusive min "
+                          f"{schema['exclusiveMinimum']}")
+
+
+def validate(summary_path: str = DEFAULT_SUMMARY,
+             schema_path: str = SCHEMA) -> list:
+    """Return a list of violation strings (empty = valid)."""
+    with open(summary_path) as f:
+        summary = json.load(f)
+    with open(schema_path) as f:
+        schema = json.load(f)
+    try:
+        import jsonschema
+    except ImportError:
+        errors: list = []
+        _check(summary, schema, "", errors)
+        return errors
+    validator = jsonschema.Draft7Validator(schema)
+    return [f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
+            f"{e.message}" for e in validator.iter_errors(summary)]
+
+
+def main(argv=None) -> None:
+    args = sys.argv[1:] if argv is None else argv
+    path = args[0] if args else DEFAULT_SUMMARY
+    errors = validate(path)
+    if errors:
+        for e in errors:
+            print(f"SCHEMA VIOLATION {e}")
+        raise SystemExit(1)
+    print(f"{os.path.relpath(path, ROOT)}: OK "
+          f"(schema {os.path.relpath(SCHEMA, ROOT)})")
+
+
+if __name__ == "__main__":
+    main()

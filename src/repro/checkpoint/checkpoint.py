@@ -3,6 +3,13 @@
 Arrays are gathered to host (fine for the CPU/reduced paths; the full-size
 configs only ever exist abstractly).  Keys are '/'-joined pytree paths, so
 restore round-trips through arbitrary nested dict/list/tuple structures.
+
+``restore_flat`` walks the CALLER's template, so an archive may carry
+extra keys the template doesn't name and they are simply ignored — the
+population-mode fleet leans on this: its checkpoints add the streaming
+cursor (``pop_last`` / ``pop_state`` re-entry table, ``cohorts_t`` /
+``cohorts_idx`` draw history) next to the carry, and a non-population
+restore of the same layout never trips over them.
 """
 from __future__ import annotations
 

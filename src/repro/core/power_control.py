@@ -205,8 +205,16 @@ class AdaptiveSCA(TruncatedInversion):
     The design leaves carry whatever leading batch axes the engine's fleet
     grid has ([K, S] after the first redesign) — ``round_coeffs`` is
     per-cell under vmap either way.
+
+    ``redesign_cohort_fn(pc, gains)`` is the population-mode sibling
+    (DESIGN.md §Population): it re-solves (P1) on an incoming cohort's
+    STATIONARY statistical CSI (``gains`` [..., N], any leading batch
+    axes).  It is pure in ``gains`` — no dependence on the live fading
+    state or current design — which is what lets the streaming driver run
+    it for cohort c+1 while chunk c is still executing.
     """
     redesign_fn: Optional[object] = None   # static aux: (pc, fading, state)
+    redesign_cohort_fn: Optional[object] = None   # static aux: (pc, gains)
 
 
 # K-factors above this are effectively deterministic channels; the cap keeps
@@ -272,10 +280,55 @@ def make_adaptive_sca(deployment: Deployment, prm: OTAParams,
             thresholds=np.asarray(theory.chi_threshold(gamma, prm)),
             noise_over_alpha=np.sqrt(prm.n0) / alpha)
 
+    # population cohorts: same solver, but the CSI is the incoming
+    # cohort's stationary gains (family from prm, scalar parameter) —
+    # pure in `gains`, safe to run ahead of the executing chunk
+    family = "rayleigh" if prm.is_rayleigh else prm.fading.family
+    if family == "rician":
+        fparam = float(np.asarray(prm.fading.rician_k))
+    elif family == "nakagami":
+        fparam = float(np.asarray(prm.fading.nakagami_m))
+    else:
+        fparam = 1.0
+
+    def redesign_cohort(pc: AdaptiveSCA, gains):
+        with enable_x64():
+            n = prm.num_devices
+            g = np.asarray(gains, np.float64)
+            if g.shape[-1] != n:
+                raise ValueError(f"cohort gains have {g.shape[-1]} devices "
+                                 f"but the design was built for {n}")
+            batch = g.shape[:-1]
+            gb = jnp.asarray(g.reshape((-1, n)))
+            b = gb.shape[0]
+
+            def row(v):
+                return jnp.broadcast_to(jnp.asarray(v, jnp.float64), (b,))
+
+            prm_b = tjx.SolverParams(
+                d=row(prm.d), gmax=row(prm.gmax), es=row(prm.es),
+                n0=row(prm.n0), gains=gb,
+                sigma_sq=jnp.broadcast_to(
+                    jnp.asarray(prm.sigma_sq, jnp.float64), (b, n)),
+                eta=row(prm.eta), lsmooth=row(prm.lsmooth),
+                kappa_sq=row(prm.kappa_sq), dropout=row(prm.dropout),
+                fading_param=jnp.full((b, n), fparam, jnp.float64),
+                family=family)
+            out = solvers.solve_batch_device(prm_b, cfg)
+            shape = batch + (n,)
+            gamma = np.asarray(out["gamma"]).reshape(shape)
+            p = np.asarray(out["p"]).reshape(shape)
+            alpha = np.asarray(out["alpha"]).reshape(batch)
+        return dataclasses.replace(
+            pc, gamma=gamma, alpha=alpha, p=p,
+            thresholds=np.asarray(theory.chi_threshold(gamma, prm)),
+            noise_over_alpha=np.sqrt(prm.n0) / alpha)
+
     return AdaptiveSCA(
         name="adaptive_sca", requires_global_csi=False, gamma=base.gamma,
         alpha=base.alpha, p=base.p, thresholds=base.thresholds, n0=prm.n0,
-        noise_over_alpha=base.noise_over_alpha, redesign_fn=redesign)
+        noise_over_alpha=base.noise_over_alpha, redesign_fn=redesign,
+        redesign_cohort_fn=redesign_cohort)
 
 
 # ---------------------------------------------------------------------------
@@ -699,15 +752,17 @@ def stack_schemes(schemes):
         # (rows share the fleet's fading process and problem constants —
         # per-row state is what the redesign actually consumes).
         statics = [f for f in _scheme_statics(cls)
-                   if f not in ("name", "redesign_fn")]
+                   if f not in ("name", "redesign_fn", "redesign_cohort_fn")]
         s0 = {f: getattr(schemes[0], f) for f in statics}
         homogeneous = all(
             all(getattr(pc, f) == s0[f] for f in statics)
             for pc in schemes[1:])
     if homogeneous:
         kw = dict(s0, name="+".join(names))
-        if "redesign_fn" in (f.name for f in dataclasses.fields(cls)):
-            kw["redesign_fn"] = schemes[0].redesign_fn
+        fields = tuple(f.name for f in dataclasses.fields(cls))
+        for hook in ("redesign_fn", "redesign_cohort_fn"):
+            if hook in fields:
+                kw[hook] = getattr(schemes[0], hook)
         for f in _SCHEME_LEAVES[cls]:
             vals = [getattr(pc, f) for pc in schemes]
             if all(v is None for v in vals):

@@ -29,6 +29,7 @@ feeds the sweep runner in ``benchmarks/scenario_sweep.py``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -224,30 +225,39 @@ class FadingProcess:
     For rho == 0 and p_dropout == 0, ``step`` consumes the key exactly like
     ``ota.draw_fading`` in the pre-scenario path — the baseline training
     trajectory is bit-for-bit identical.
+
+    The per-draw internals take the gains vector explicitly (defaulting to
+    the deployment's ``self.gains``), so the same process serves cohort
+    runs where the active gains change every chunk (``step_cohort``):
+    population-backed processes are built with ``gains=None`` and only ever
+    see cohort gains as operands.
     """
-    gains: jnp.ndarray
+    gains: Optional[jnp.ndarray] = None
     family: str = "rayleigh"
     k_factor: Optional[jnp.ndarray] = None    # rician
     m: Optional[jnp.ndarray] = None           # nakagami
     rho: float = 0.0
     p_dropout: float = 0.0
 
-    def _draw_iid(self, key: jax.Array) -> jax.Array:
+    def _draw_iid(self, key: jax.Array, gains=None) -> jax.Array:
+        g = self.gains if gains is None else gains
         if self.family == "rayleigh":
-            return ota.draw_fading(key, self.gains)
+            return ota.draw_fading(key, g)
         if self.family == "rician":
-            return ota.draw_fading_rician(key, self.gains, self.k_factor)
-        return ota.draw_fading_nakagami(key, self.gains, self.m)
+            return ota.draw_fading_rician(key, g, self.k_factor)
+        return ota.draw_fading_nakagami(key, g, self.m)
 
-    def _diffuse_gains(self) -> jnp.ndarray:
+    def _diffuse_gains(self, gains=None) -> jnp.ndarray:
+        g = self.gains if gains is None else gains
         if self.family == "rician":
-            return self.gains / (self.k_factor + 1.0)
-        return self.gains
+            return g / (self.k_factor + 1.0)
+        return g
 
-    def _los(self) -> jnp.ndarray:
+    def _los(self, gains=None) -> jnp.ndarray:
+        g = self.gains if gains is None else gains
         if self.family == "rician":
-            return jnp.sqrt(self.gains * self.k_factor / (self.k_factor + 1.0))
-        return jnp.zeros_like(self.gains)
+            return jnp.sqrt(g * self.k_factor / (self.k_factor + 1.0))
+        return jnp.zeros_like(g)
 
     def init(self, key: jax.Array) -> jax.Array:
         """Stationary scattered-component draw (state for Markov dynamics)."""
@@ -274,18 +284,24 @@ class FadingProcess:
                 h.reshape(batch + h.shape[-1:]))
 
     def step(self, state: jax.Array, key: jax.Array):
+        return self.step_cohort(state, key, self.gains)
+
+    def step_cohort(self, state: jax.Array, key: jax.Array, gains):
+        """``step`` on an explicit gains vector (the active cohort's): the
+        key splits and draw order are identical, so with ``gains`` equal to
+        the deployment gains this IS ``step``, bit for bit."""
         if self.rho == 0.0 and self.p_dropout == 0.0:
-            return state, self._draw_iid(key)
+            return state, self._draw_iid(key, gains)
         k_fade, k_drop = jax.random.split(key)
         if self.rho > 0.0:
-            w = ota.draw_fading(k_fade, self._diffuse_gains())
+            w = ota.draw_fading(k_fade, self._diffuse_gains(gains))
             state = self.rho * state + np.sqrt(1.0 - self.rho**2) * w
-            h = jax.lax.complex(self._los() + state.real, state.imag)
+            h = jax.lax.complex(self._los(gains) + state.real, state.imag)
         else:
-            h = self._draw_iid(k_fade)
+            h = self._draw_iid(k_fade, gains)
         if self.p_dropout > 0.0:
             keep = jax.random.bernoulli(k_drop, 1.0 - self.p_dropout,
-                                        self.gains.shape)
+                                        jnp.shape(gains))
             h = jnp.where(keep, h, jnp.zeros_like(h))
         return state, h
 
@@ -316,6 +332,310 @@ def scenario_fading_process(scenario: Scenario,
     if dep is None:
         dep = realize(scenario)
     return make_fading_process(dep, scenario.dynamics)
+
+
+# ---------------------------------------------------------------------------
+# Population layer (DESIGN.md §Population): a parametric device universe of
+# up to ~1M devices, materialized lazily per cohort draw.  Per-device
+# large-scale parameters are pure counter-based hashes of (population seed,
+# device index), so nothing is stored per device until a cohort indexes in;
+# cohort draws are pure functions of (population seed, run seed, tick), so
+# a resumed stream redraws identical cohorts without any RNG cursor.
+# ---------------------------------------------------------------------------
+
+_COHORT_SALT = 0xC040  # draw_cohort rng lane
+_AGE_SALT = 0xA6ED     # stage_states innovation lane
+
+# hash lanes per derived per-device quantity (normals consume lane, lane+1)
+_LANE_GEOM, _LANE_CLUSTER, _LANE_SHADOW = 0, 1, 2
+_LANE_TRAFFIC, _LANE_SPREAD = 4, 6
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer: well-mixed uint64 from uint64."""
+    x = np.asarray(x, np.uint64)
+    with np.errstate(over="ignore"):
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def _hash_u01(seed: int, idx: np.ndarray, lane: int) -> np.ndarray:
+    """Uniform(0, 1) doubles, a pure function of (seed, device idx, lane)."""
+    x = np.asarray(idx, np.uint64)
+    with np.errstate(over="ignore"):
+        x = x * np.uint64(0xD1342543DE82EF95)
+        x = x ^ (np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+                 * np.uint64(0x9E3779B97F4A7C15))
+        x = x + np.uint64(lane) * np.uint64(0xBF58476D1CE4E5B9)
+    x = _splitmix64(_splitmix64(x))
+    return (x >> np.uint64(11)).astype(np.float64) * 2.0 ** -53
+
+
+def _hash_normal(seed: int, idx: np.ndarray, lane: int) -> np.ndarray:
+    """Standard normals via Box-Muller on lanes (lane, lane + 1)."""
+    u1 = np.maximum(_hash_u01(seed, idx, lane), 2.0 ** -53)
+    u2 = _hash_u01(seed, idx, lane + 1)
+    return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+
+
+SAMPLINGS = ("uniform", "traffic")
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """A parametric device population: the Scenario axes minus per-device
+    realization, plus a sampling model for cohort draws.
+
+    sampling       "uniform" — every device equally likely per round;
+                   "traffic" — arrival-weighted: device weights are
+                   log-normal(0, traffic_sigma²) (heavy-tailed activity,
+                   the Gumbel-top-k draw in ``Population.draw_cohort``).
+    seed           the population's own seed: all per-device hashes and
+                   cohort draws derive from it (independent of run seeds).
+    """
+    size: int = 1_000_000
+    geometry: GeometrySpec = GeometrySpec()
+    shadowing: Optional[ShadowingSpec] = None
+    fading: FadingSpec = RAYLEIGH
+    dynamics: DynamicsSpec = DynamicsSpec()
+    wireless: WirelessConfig = WirelessConfig()
+    sampling: str = "uniform"
+    traffic_sigma: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.size <= 0:
+            raise ValueError("population size must be positive")
+        if self.sampling not in SAMPLINGS:
+            raise ValueError(f"unknown sampling {self.sampling!r}; "
+                             f"available: {SAMPLINGS}")
+        for pname in ("rician_k", "nakagami_m"):
+            if np.asarray(getattr(self.fading, pname)).ndim > 0:
+                raise ValueError(
+                    f"parametric populations need a scalar {pname} (per-"
+                    f"device arrays cannot be materialized lazily)")
+
+
+@dataclasses.dataclass
+class Population:
+    """Lazily materialized device population (DESIGN.md §Population).
+
+    Two flavours share one interface:
+
+    * parametric — built from a :class:`PopulationSpec`; ``gains_of(idx)``
+      hashes (seed, idx) into geometry/shadowing and is O(len(idx)),
+      whatever ``size`` says, so 1M devices cost nothing until drawn;
+    * tabular — explicit [P] gains (``from_deployment``), the anchor for
+      the cohort == population bitwise-equivalence contract.
+
+    ``draw_cohort(n, tick, seed)`` is a pure function of its arguments
+    (counter-based ``np.random.default_rng`` keying; Gumbel-top-k without
+    replacement under traffic weighting), so streaming resume re-derives
+    every draw instead of checkpointing an RNG cursor.  The Gauss-Markov
+    re-entry table (``init_table`` / ``stage_states`` / ``commit_states``)
+    ages a returning device's scattered state by its absence:
+    d = rho^m d0 + sqrt(1 - rho^(2m)) w over m missed rounds — m = 0 is an
+    exact pass-through (back-to-back cohorts keep their trajectory) and a
+    never-seen device gets a fresh stationary draw.
+    """
+    spec: Optional[PopulationSpec] = None
+    gains_table: Optional[np.ndarray] = None      # [P] tabular gains
+    weights_table: Optional[np.ndarray] = None    # [P] tabular weights
+    fading: FadingSpec = RAYLEIGH
+    dynamics: DynamicsSpec = DynamicsSpec()
+    seed: int = 0
+    name: str = "population"
+
+    def __post_init__(self):
+        if (self.spec is None) == (self.gains_table is None):
+            raise ValueError("exactly one of spec / gains_table required")
+        if self.spec is not None:
+            self.fading = self.spec.fading
+            self.dynamics = self.spec.dynamics
+            self.seed = self.spec.seed
+        else:
+            self.gains_table = np.asarray(self.gains_table, np.float64)
+            for pname in ("rician_k", "nakagami_m"):
+                if np.asarray(getattr(self.fading, pname)).ndim > 0:
+                    raise ValueError(f"populations need a scalar {pname}")
+        if self.fading.family == "nakagami" and self.dynamics.rho > 0:
+            raise ValueError("Gauss-Markov dynamics unsupported for nakagami")
+        self._weights = None
+
+    @classmethod
+    def from_deployment(cls, dep: Deployment,
+                        dynamics: Optional[DynamicsSpec] = None,
+                        weights: Optional[np.ndarray] = None) -> "Population":
+        """Wrap a realized Deployment as a (tabular) population — with
+        cohort_size == dep.num_devices this reproduces the full-
+        participation engine path bitwise."""
+        return cls(gains_table=np.asarray(dep.gains, np.float64),
+                   weights_table=weights, fading=dep.fading_spec,
+                   dynamics=(dynamics if dynamics is not None
+                             else DynamicsSpec(p_dropout=dep.p_dropout)),
+                   name=f"deployment[{dep.num_devices}]")
+
+    @property
+    def size(self) -> int:
+        return (self.spec.size if self.spec is not None
+                else int(self.gains_table.shape[0]))
+
+    # -- lazy per-device parameters -------------------------------------
+
+    def distances_of(self, idx: np.ndarray) -> np.ndarray:
+        """Parametric geometry at device indices (hash-derived)."""
+        if self.spec is None:
+            raise ValueError("tabular populations have no geometry")
+        geom, cfg, p = self.spec.geometry, self.spec.wireless, self.size
+        idx = np.asarray(idx, np.int64)
+        u = _hash_u01(self.seed, idx, _LANE_GEOM)
+        if geom.kind == "disk":
+            dist = cfg.r_max * np.sqrt(u)
+        elif geom.kind == "ring":
+            dist = np.sqrt(geom.r_min**2 + u * (cfg.r_max**2 - geom.r_min**2))
+        elif geom.kind == "two_cluster":
+            near = _hash_u01(self.seed, idx, _LANE_CLUSTER) < geom.near_frac
+            centers = np.where(near, geom.near_center, geom.far_center)
+            dist = centers + (_hash_normal(self.seed, idx, _LANE_SPREAD)
+                              * geom.cluster_spread)
+            dist = np.minimum(dist, cfg.r_max)
+        else:  # grid: deterministic linspace over the whole population
+            lo = max(geom.r_min, 1.0)
+            dist = lo + idx * (cfg.r_max - lo) / max(p - 1, 1)
+        return np.maximum(dist, 1.0)
+
+    def gains_of(self, idx: np.ndarray) -> np.ndarray:
+        """Average channel gains at device indices, [len(idx)] float64."""
+        idx = np.asarray(idx, np.int64)
+        if self.spec is None:
+            return self.gains_table[idx]
+        cfg = self.spec.wireless
+        gains = channel.average_gain(self.distances_of(idx), cfg.pl0_db,
+                                     cfg.pl_exponent)
+        if self.spec.shadowing is not None \
+                and self.spec.shadowing.sigma_db > 0:
+            db = (_hash_normal(self.seed, idx, _LANE_SHADOW)
+                  * self.spec.shadowing.sigma_db)
+            gains = gains * 10.0 ** (-db / 10.0)
+        return gains
+
+    def weights(self) -> Optional[np.ndarray]:
+        """[P] sampling weights (None = uniform).  Materialized once and
+        cached — the only O(P) array a parametric population ever builds."""
+        if self.spec is not None and self.spec.sampling == "uniform":
+            return None
+        if self._weights is None:
+            if self.spec is not None:
+                z = _hash_normal(self.seed, np.arange(self.size, dtype=np.int64),
+                                 _LANE_TRAFFIC)
+                self._weights = np.exp(self.spec.traffic_sigma * z)
+            else:
+                self._weights = (None if self.weights_table is None
+                                 else np.asarray(self.weights_table,
+                                                 np.float64))
+        return self._weights
+
+    # -- cohort draws ----------------------------------------------------
+
+    def draw_cohort(self, n: int, tick: int, seed: int = 0) -> np.ndarray:
+        """Sorted [n] device indices for cohort ``tick`` of run ``seed``.
+
+        Pure in (population seed, seed, tick): counter-based rng keying, no
+        mutable stream — a resumed driver re-derives any draw.  n == size
+        returns arange (the full-participation identity path).  Weighted
+        sampling is Gumbel-top-k on log-weights — exact sampling without
+        replacement proportional to weights at each slot.
+        """
+        p = self.size
+        if not 0 < n <= p:
+            raise ValueError(f"cohort size {n} not in [1, {p}]")
+        if n == p:
+            return np.arange(p, dtype=np.int64)
+        rng = np.random.default_rng(
+            (self.seed, int(seed), int(tick), _COHORT_SALT))
+        w = self.weights()
+        if w is None:
+            idx = rng.choice(p, size=n, replace=False)
+        else:
+            keys = np.log(w) + rng.gumbel(size=p)
+            idx = np.argpartition(keys, p - n)[p - n:]
+        return np.sort(idx.astype(np.int64))
+
+    # -- Gauss-Markov re-entry state ------------------------------------
+
+    def init_table(self, num_rows: int) -> dict:
+        """Host-side per-(seed-row, device) fading memory: round last seen
+        (-1 = never) and the scattered state as of that round."""
+        return {"last": np.full((num_rows, self.size), -1, np.int64),
+                "state": np.zeros((num_rows, self.size), np.complex64)}
+
+    def stage_states(self, table: dict, row: int, idx: np.ndarray, t0: int,
+                     seed: int = 0) -> np.ndarray:
+        """Scattered states for cohort ``idx`` entering at round ``t0``,
+        aged from the table by each device's absence (see class docstring).
+        Pure in (table contents, row, idx, t0, seed) — recomputed
+        identically on resume.  [len(idx)] complex64."""
+        rho = float(self.dynamics.rho)
+        idx = np.asarray(idx, np.int64)
+        last = table["last"][row, idx]
+        old = table["state"][row, idx].astype(np.complex128)
+        missed = np.maximum(t0 - 1 - last, 0)
+        decay = np.where(last < 0, 0.0,
+                         rho ** missed if rho > 0.0 else (missed == 0))
+        rng = np.random.default_rng(
+            (self.seed, int(seed), int(t0), _AGE_SALT))
+        z = rng.standard_normal((2, idx.shape[0]))
+        k = float(np.asarray(self.fading.rician_k)) \
+            if self.fading.family == "rician" else 0.0
+        diffuse = self.gains_of(idx) / (k + 1.0)
+        w = (z[0] + 1j * z[1]) * np.sqrt(diffuse / 2.0)
+        state = decay * old + np.sqrt(np.maximum(1.0 - decay**2, 0.0)) * w
+        return state.astype(np.complex64)
+
+    def commit_states(self, table: dict, row: int, idx: np.ndarray,
+                      t_end: int, state: np.ndarray) -> None:
+        """Write a finished chunk's final states back: cohort ``idx`` was
+        last seen at round ``t_end`` with scattered state ``state``."""
+        idx = np.asarray(idx, np.int64)
+        table["last"][row, idx] = int(t_end)
+        table["state"][row, idx] = np.asarray(state, np.complex64)
+
+    # -- glue ------------------------------------------------------------
+
+    def fading_process(self) -> Optional[FadingProcess]:
+        """The cohort-run per-round sampler (``step_cohort`` consumes the
+        staged cohort gains); None when the population is the paper's
+        i.i.d.-Rayleigh baseline — the engine's fading=None fast path,
+        which is what the bitwise full-participation contract pins."""
+        dyn = self.dynamics
+        if self.fading.family == "rayleigh" and dyn == DynamicsSpec():
+            return None
+        k_factor = m = None
+        if self.fading.family == "rician":
+            k_factor = jnp.asarray(float(np.asarray(self.fading.rician_k)))
+        if self.fading.family == "nakagami":
+            m = jnp.asarray(float(np.asarray(self.fading.nakagami_m)))
+        return FadingProcess(gains=None, family=self.fading.family,
+                             k_factor=k_factor, m=m, rho=dyn.rho,
+                             p_dropout=dyn.p_dropout)
+
+    def describe(self) -> str:
+        """Stable identity string for fleet checkpoints (a resume against
+        a different population must be rejected, not silently mixed)."""
+        dyn = self.dynamics
+        tail = (f"fading={self.fading.family},rho={dyn.rho}"
+                f",drop={dyn.p_dropout},seed={self.seed}")
+        if self.spec is not None:
+            sp = self.spec
+            return (f"pop(size={sp.size},geom={sp.geometry.kind},"
+                    f"shadow={sp.shadowing is not None},"
+                    f"sampling={sp.sampling},sigma={sp.traffic_sigma},{tail})")
+        h = hashlib.sha1(self.gains_table.tobytes()).hexdigest()[:12]
+        w = self.weights()
+        wh = "none" if w is None else hashlib.sha1(w.tobytes()).hexdigest()[:12]
+        return f"pop(table={h},weights={wh},{tail})"
 
 
 # ---------------------------------------------------------------------------

@@ -17,25 +17,47 @@ boundary.  A preempted sweep rerun with ``resume=True`` fast-forwards to
 the first incomplete chunk and finishes bit-identically to an
 uninterrupted run (same carries, same key streams, same chunk schedule);
 AdaptiveSCA design trajectories survive the restart.
+
+Population mode (DESIGN.md §Population): pass a ``scenarios.Population``
+and the driver becomes a streaming serving loop — each chunk runs on a
+per-round-drawn cohort of ``cohort_size`` devices out of up to ~1M, with
+the draw, gain materialization and ``adaptive_sca`` cohort redesign staged
+on the host WHILE the previous chunk executes on device (double-buffered;
+``stream=False`` serializes the same stages — identical math, different
+walls).  Staging is pure in (population, run seed, tick), never in chunk
+outputs, which is both why overlap cannot change results and why resume
+needs no RNG cursor: a restart re-derives every draw from the chunk index.
 """
 from __future__ import annotations
 
 import hashlib
 import os
 import time
-from typing import Any, Callable, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
-from repro.core.power_control import stack_schemes
+from repro.core.power_control import _scheme_n, stack_schemes
 from repro.fl.engine import (FADING_INIT_SALT, FLResult, _concat_traces,
                              chunk_lengths, make_round_body)
 from repro.fl.placement import Placement, VmapPlacement
 
 PyTree = Any
+
+
+class _Staged(NamedTuple):
+    """One staged cohort: everything chunk ``ci`` needs that can be
+    computed before chunk ``ci - 1`` finishes (the double buffer)."""
+    ci: int
+    tick: int
+    idx: np.ndarray      # [S, N] drawn device indices (per seed row)
+    cohort: dict         # chunk operand: gains [S, N], data_idx [S, N]
+    stacked: Any         # cohort-redesigned schemes (None if non-adaptive)
+    wall: float
 
 
 def _ckpt_file(path: str) -> str:
@@ -69,14 +91,17 @@ def _fading_desc(fading) -> str:
 
 
 def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
-                    fading) -> dict:
+                    fading, population=None, cohort_size=None,
+                    cohort_rounds=None) -> dict:
     """Everything that must match for a resumed run to be bit-identical
     to the uninterrupted one: the grid, the full run config (dynamics:
     eta/batch_size/gmax/clipping), the per-scheme etas, the aggregation
     path, the placement (the bitwise contract holds per placement), and
     the physics/data — gains and dataset content hashes plus the fading
-    process descriptor — so a resume against a different world is
-    rejected, not silently mixed."""
+    process descriptor and the population/cohort schedule — so a resume
+    against a different world is rejected, not silently mixed.  The
+    ``stream`` flag is deliberately absent: overlap changes walls, never
+    math, so resuming across stream modes is legal."""
     return {"names": list(names), "seeds": list(seeds),
             "num_rounds": run.num_rounds, "eval_every": run.eval_every,
             "eta": run.eta, "batch_size": run.batch_size, "gmax": run.gmax,
@@ -84,12 +109,17 @@ def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
             "etas": [float(e) for e in np.asarray(etas)],
             "flat": bool(flat), "placement": placement.describe(),
             "gains": _array_digest(gains), "data": _array_digest(*data),
-            "fading": _fading_desc(fading)}
+            "fading": _fading_desc(fading),
+            "population": ("none" if population is None
+                           else population.describe()),
+            "cohort_size": int(cohort_size or 0),
+            "cohort_rounds": int(cohort_rounds or 0)}
 
 
 def _save_fleet_state(path: str, chunks_done: int, t: int, stacked,
                       params_b, fading_state, keys_b, metric_chunks,
-                      evals, designs, identity: dict) -> None:
+                      evals, designs, identity: dict, pop_table=None,
+                      cohorts=None) -> None:
     state = _carry_tree(jax.tree.map(np.asarray, stacked),
                         jax.tree.map(np.asarray, params_b),
                         None if fading_state is None
@@ -105,12 +135,21 @@ def _save_fleet_state(path: str, chunks_done: int, t: int, stacked,
     if designs:
         state["designs_t"] = np.asarray([tt for tt, _ in designs], np.int64)
         state["designs_g"] = np.stack([np.asarray(g) for _, g in designs])
+    if pop_table is not None:
+        # the population cursor: which devices a resumed stream has seen,
+        # and their Gauss-Markov states — cohort draws themselves need no
+        # cursor (they re-derive from (population seed, run seed, tick))
+        state["pop_last"] = pop_table["last"]
+        state["pop_state"] = pop_table["state"]
+    if cohorts:
+        state["cohorts_t"] = np.asarray([tt for tt, _ in cohorts], np.int64)
+        state["cohorts_idx"] = np.stack([np.asarray(i) for _, i in cohorts])
     ckpt.save(path, state, meta={
         "chunks_done": chunks_done, "rounds_done": t, **identity})
 
 
 def _load_fleet_state(path: str, stacked, params_b, fading_state, keys_b,
-                      identity: dict, adaptive: bool):
+                      identity: dict, adaptive: bool, pop_table=None):
     meta = ckpt.load_meta(path)
     got = {k: meta.get(k) for k in identity}
     mismatch = {k: (got[k], identity[k]) for k in identity
@@ -134,11 +173,18 @@ def _load_fleet_state(path: str, stacked, params_b, fading_state, keys_b,
     if adaptive:
         designs = [(int(tt), flat["designs_g"][i])
                    for i, tt in enumerate(flat["designs_t"])]
+    if pop_table is not None and "pop_last" in flat:
+        pop_table["last"][...] = flat["pop_last"]
+        pop_table["state"][...] = flat["pop_state"]
+    cohorts = None
+    if "cohorts_t" in flat:
+        cohorts = [(int(tt), np.asarray(flat["cohorts_idx"][i]))
+                   for i, tt in enumerate(flat["cohorts_t"])]
     fstate = state["carry"].get("fstate") if fading_state is not None \
         else None
     return (int(meta["chunks_done"]), int(meta["rounds_done"]),
             state["scheme"], state["carry"]["params"], fstate,
-            state["carry"]["keys"], metric_chunks, evals, designs)
+            state["carry"]["keys"], metric_chunks, evals, designs, cohorts)
 
 
 def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
@@ -147,7 +193,10 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
               flat: bool = True, log: bool = False,
               placement: Optional[Placement] = None,
               checkpoint_path: Optional[str] = None, resume: bool = False,
-              max_chunks: Optional[int] = None) -> FLResult:
+              max_chunks: Optional[int] = None, population=None,
+              cohort_size: Optional[int] = None,
+              cohort_rounds: Optional[int] = None,
+              stream: bool = True) -> FLResult:
     """A [K-scheme x S-seed] experiment grid through a hardware placement.
 
     The grid/scheme/seed/eta semantics are ``engine.run_fleet``'s (which
@@ -168,10 +217,34 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                      this invocation — the preemption hook sweeps and the
                      resume tests use.
 
+    Population mode (DESIGN.md §Population):
+
+    population       a ``scenarios.Population``: each chunk runs on a
+                     drawn cohort instead of the full device set.  Data
+                     shards are assigned by device index mod the shard
+                     count; gains come from the population, lazily.  When
+                     ``fading`` is None it defaults to the population's
+                     own process (``Population.fading_process``).
+    cohort_size      active devices per round, default = the schemes'
+                     device count (which it must equal either way).
+    cohort_rounds    redraw cadence in rounds; None = once per chunk
+                     (i.e. the eval cadence).  Cohorts never straddle a
+                     chunk: ``chunk_lengths`` inserts boundaries.
+    stream           double-buffer staging (default True): the next
+                     cohort's draw + gains + ``adaptive_sca`` cohort
+                     redesign run on a host worker thread WHILE the
+                     current chunk executes, so redesign latency hides
+                     behind device time.  ``stream=False`` runs the same
+                     stages serially — bitwise-identical results.
+
     Adaptive schemes (``power_control.AdaptiveSCA``) re-design BETWEEN
     chunks from the live fading state, whatever the placement: the state
     gathers to host at the chunk boundary, the batched SCA solver re-solves
     per cell, and the new [K, S] design leaves ship with the next chunk.
+    In population mode the redesign input is the INCOMING cohort's
+    stationary statistical CSI instead (``redesign_cohort_fn`` — pure in
+    the cohort gains, hence overlappable); Gauss-Markov state still
+    threads through rounds via the population's re-entry table.
     """
     t0 = time.time()
     placement = placement if placement is not None else VmapPlacement()
@@ -189,12 +262,31 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         raise ValueError(f"etas shape {etas.shape} != ({k},)")
 
     redesign = getattr(stacked, "redesign_fn", None)
-    adaptive = redesign is not None and fading is not None
-    stacked = placement.prepare_schemes(stacked, s_axis, adaptive)
+    pop_mode = population is not None
+    n_cohort = cohort_cadence = None
+    if pop_mode:
+        n_cohort = int(cohort_size) if cohort_size else _scheme_n(stacked)
+        if not 0 < n_cohort <= population.size:
+            raise ValueError(f"cohort size {n_cohort} not in "
+                             f"[1, {population.size}]")
+        if _scheme_n(stacked) != n_cohort:
+            raise ValueError(
+                f"schemes are designed for {_scheme_n(stacked)} devices "
+                f"but the cohort draws {n_cohort} — build the power "
+                f"control for the cohort-sized world")
+        cohort_cadence = int(cohort_rounds) if cohort_rounds else None
+        if fading is None:
+            fading = population.fading_process()
+    adaptive = redesign is not None and fading is not None and not pop_mode
+    redesign_cohort = getattr(stacked, "redesign_cohort_fn", None)
+    pop_adaptive = pop_mode and redesign_cohort is not None
+    stacked = placement.prepare_schemes(stacked, s_axis,
+                                        adaptive or pop_adaptive)
 
     round_body = make_round_body(loss_fn, gains, run, fading=fading,
-                                 flat=flat)
-    chunk = placement.build_chunk(round_body, adaptive)
+                                 flat=flat, cohort=pop_mode)
+    chunk = placement.build_chunk(round_body, adaptive or pop_adaptive,
+                                  cohort=pop_mode)
 
     data = tuple(jnp.asarray(a) for a in data)
     params_b = jax.tree.map(
@@ -203,76 +295,189 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds])      # [S, 2]
     keys_b = jnp.tile(keys0[None], (k, 1, 1))                      # [K, S, 2]
     fading_state = None
-    if fading is not None:
+    pop_table = None
+    if fading is not None and not pop_mode:
         init_keys = jax.vmap(
             lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
         state_s = fading.init_batch(init_keys)                     # [S, N]
         fading_state = jnp.tile(state_s[None], (k,) + (1,) * state_s.ndim)
+    elif pop_mode and fading is not None:
+        # cohort states are staged per chunk from the re-entry table
+        pop_table = population.init_table(s_axis)
 
     eval_b = None
     if eval_fn is not None:
         eval_b = jax.jit(jax.vmap(jax.vmap(eval_fn)))
 
-    designs = [(0, np.asarray(stacked.gamma))] if adaptive else None
+    designs = None
+    if adaptive:
+        designs = [(0, np.asarray(stacked.gamma))]
+    elif pop_adaptive:
+        designs = []
+    cohorts = [] if pop_mode else None
     evals, metric_chunks, t = [], [], 0
     lengths = chunk_lengths(run.num_rounds, run.eval_every,
-                            eval_fn is not None or adaptive)
+                            eval_fn is not None or adaptive or pop_adaptive,
+                            cohort_cadence)
+    starts = np.concatenate([[0], np.cumsum(lengths)])[:-1].astype(int)
+
+    def _tick_of(ci: int) -> int:
+        return int(starts[ci]) // cohort_cadence if cohort_cadence else ci
+
+    n_shards = int(jnp.shape(data[0])[0]) if pop_mode else 0
+
+    # the staging lane: devices execute queued computations in FIFO order,
+    # so a redesign solve dispatched to the device running the chunk waits
+    # for the whole chunk instead of overlapping it.  With more than one
+    # device visible the solve runs on the LAST one (the vmap fleet only
+    # occupies the first); CPU executables are identical across host
+    # devices, so the lane cannot change a single bit — only walls.
+    stage_dev = None
+    if pop_adaptive and len(jax.devices()) > 1:
+        stage_dev = jax.devices()[-1]
+
+    def _stage(ci: int, base) -> _Staged:
+        # everything here is pure in (population, seeds, tick) and the
+        # schemes' static problem constants — NEVER in chunk outputs — so
+        # running it concurrently with the executing chunk (stream=True)
+        # cannot change any number, only walls
+        ts = time.time()
+        tick = _tick_of(ci)
+        idx = np.stack([population.draw_cohort(n_cohort, tick, s)
+                        for s in seeds])                          # [S, N]
+        gains_sn = np.stack([population.gains_of(r) for r in idx])
+        cohort_b = {"gains": jnp.asarray(gains_sn),
+                    "data_idx": jnp.asarray((idx % n_shards)
+                                            .astype(np.int32))}
+        new_stacked = None
+        fresh = ci == 0 or tick != _tick_of(ci - 1)
+        if pop_adaptive and fresh:
+            gains_ksn = np.broadcast_to(
+                gains_sn[None], (k,) + gains_sn.shape).copy()
+            if stage_dev is not None:
+                with jax.default_device(stage_dev):
+                    new_stacked = redesign_cohort(base, gains_ksn)
+            else:
+                new_stacked = redesign_cohort(base, gains_ksn)
+        return _Staged(ci=ci, tick=tick, idx=idx, cohort=cohort_b,
+                       stacked=new_stacked, wall=time.time() - ts)
 
     identity = None
     if checkpoint_path is not None:
         identity = _fleet_identity(names, seeds, run, etas, flat, placement,
-                                   gains, data, fading)
+                                   gains, data, fading, population,
+                                   n_cohort, cohort_cadence)
     start_chunk = 0
     if checkpoint_path and resume \
             and os.path.exists(_ckpt_file(checkpoint_path)):
         (start_chunk, t, stacked, params_b, fading_state, keys_b,
-         metric_chunks, evals, designs) = _load_fleet_state(
+         metric_chunks, evals, designs, loaded_cohorts) = _load_fleet_state(
             checkpoint_path, stacked, params_b, fading_state, keys_b,
-            identity, adaptive)
+            identity, adaptive or pop_adaptive, pop_table)
+        if loaded_cohorts is not None:
+            cohorts = loaded_cohorts
         if log:
             print(f"# resumed fleet from {checkpoint_path} at chunk "
                   f"{start_chunk} (round {t})")
+    last_tick = _tick_of(start_chunk - 1) \
+        if pop_mode and start_chunk > 0 else None
 
+    executor = ThreadPoolExecutor(max_workers=1) \
+        if pop_mode and stream else None
+    staged = next_fut = None
+    wall_stage = 0.0
     wall_compile, first = 0.0, True
-    for ci, length in enumerate(lengths):
-        if ci < start_chunk:
-            continue
-        params_b, fading_state, keys_b, metrics = chunk(
-            stacked, etas, params_b, fading_state, keys_b, data,
-            length=length)
-        if first:
-            jax.block_until_ready(params_b)
-            wall_compile = time.time() - t0
-            first = False
-        metric_chunks.append(metrics)
-        t += length
-        if adaptive and t < run.num_rounds:
-            # gather the live state to host first: the re-design solve must
-            # see one replicated array, not a mesh-sharded one, so the new
-            # design is bitwise the same whatever placement ran the chunk
-            stacked = redesign(stacked, fading, np.asarray(fading_state))
-            designs.append((t, np.asarray(stacked.gamma)))
-        if eval_b is not None:
-            ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
-            evals.append((t - 1, ev))
-            if log:
-                lead = next(iter(ev))
-                print({"round": t - 1,
-                       **{n: round(float(ev[lead][i, 0]), 4)
-                          for i, n in enumerate(names)}})
-        if checkpoint_path is not None:
-            _save_fleet_state(checkpoint_path, ci + 1, t, stacked, params_b,
-                              fading_state, keys_b, metric_chunks, evals,
-                              designs, identity)
-        if max_chunks is not None and ci + 1 - start_chunk >= max_chunks \
-                and ci + 1 < len(lengths):
-            break            # preempted on purpose; resume=True continues
+    try:
+        for ci, length in enumerate(lengths):
+            if ci < start_chunk:
+                continue
+            if pop_mode:
+                if next_fut is not None:
+                    staged, next_fut = next_fut.result(), None
+                if staged is None or staged.ci != ci:
+                    staged = _stage(ci, stacked)
+                wall_stage += staged.wall
+                t_start = int(starts[ci])
+                if staged.tick != last_tick:
+                    last_tick = staged.tick
+                    cohorts.append((t_start, staged.idx))
+                    if pop_adaptive:
+                        stacked = staged.stacked
+                        designs.append((t_start, np.asarray(stacked.gamma)))
+                if fading is not None:
+                    # re-entry staging reads the table committed by the
+                    # PREVIOUS chunk, so it stays serialized (it is a [N]
+                    # gather + aging arithmetic — cheap by construction)
+                    state_sn = np.stack([
+                        population.stage_states(pop_table, si,
+                                                staged.idx[si], t_start,
+                                                seed=seeds[si])
+                        for si in range(s_axis)])                 # [S, N]
+                    fading_state = jnp.asarray(np.broadcast_to(
+                        state_sn[None], (k,) + state_sn.shape))
+                will_stop = (max_chunks is not None
+                             and ci + 1 - start_chunk >= max_chunks
+                             and ci + 1 < len(lengths))
+                if executor is not None and ci + 1 < len(lengths) \
+                        and not will_stop:
+                    # the double buffer: stage chunk ci+1 on the worker
+                    # BEFORE dispatching chunk ci, then collect it after
+                    # the chunk returns — the cohort draw and SCA redesign
+                    # overlap device execution instead of serializing
+                    next_fut = executor.submit(_stage, ci + 1, stacked)
+                params_b, fading_state, keys_b, metrics = chunk(
+                    stacked, etas, params_b, fading_state, keys_b, data,
+                    staged.cohort, length=length)
+            else:
+                params_b, fading_state, keys_b, metrics = chunk(
+                    stacked, etas, params_b, fading_state, keys_b, data,
+                    length=length)
+            if first:
+                jax.block_until_ready(params_b)
+                wall_compile = time.time() - t0
+                first = False
+            metric_chunks.append(metrics)
+            t += length
+            if pop_mode and fading is not None:
+                # scheme rows share keys, so states agree across K: commit
+                # row 0 of the [K, S, N] state per seed
+                fs = np.asarray(fading_state)
+                for si in range(s_axis):
+                    population.commit_states(pop_table, si, staged.idx[si],
+                                             t - 1, fs[0, si])
+            if adaptive and t < run.num_rounds:
+                # gather the live state to host first: the re-design solve
+                # must see one replicated array, not a mesh-sharded one, so
+                # the new design is bitwise the same whatever placement ran
+                # the chunk
+                stacked = redesign(stacked, fading, np.asarray(fading_state))
+                designs.append((t, np.asarray(stacked.gamma)))
+            if eval_b is not None:
+                ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
+                evals.append((t - 1, ev))
+                if log:
+                    lead = next(iter(ev))
+                    print({"round": t - 1,
+                           **{n: round(float(ev[lead][i, 0]), 4)
+                              for i, n in enumerate(names)}})
+            if checkpoint_path is not None:
+                _save_fleet_state(checkpoint_path, ci + 1, t, stacked,
+                                  params_b, fading_state, keys_b,
+                                  metric_chunks, evals, designs, identity,
+                                  pop_table, cohorts)
+            if max_chunks is not None and ci + 1 - start_chunk >= max_chunks \
+                    and ci + 1 < len(lengths):
+                break        # preempted on purpose; resume=True continues
+    finally:
+        if executor is not None:
+            executor.shutdown(wait=True)
 
     wall = time.time() - t0
     return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
                     evals=evals, names=names, seeds=seeds, wall=wall,
                     wall_compile=wall_compile, wall_exec=wall - wall_compile,
-                    fading_state=fading_state, designs=designs)
+                    fading_state=fading_state, designs=designs,
+                    wall_stage=wall_stage, cohorts=cohorts)
 
 
 def _scheme_names(schemes) -> list:

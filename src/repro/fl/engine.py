@@ -79,6 +79,13 @@ class FLResult:
     designs       adaptive-scheme design trace: [(round, gamma [K, S, N])]
                   with entry (t, g) meaning design g is in effect from
                   round t (None for non-adaptive runs)
+    wall_stage    seconds spent staging cohorts (draw + gain
+                  materialization + cohort redesign); under the streaming
+                  driver this work overlaps chunk execution, so it shows
+                  up here but mostly not in wall_exec
+    cohorts       population-run cohort trace: [(round, idx [S, N])] with
+                  entry (t, idx) meaning those device indices are active
+                  from round t (None for full-participation runs)
     """
     params: PyTree
     traces: dict
@@ -90,11 +97,14 @@ class FLResult:
     wall_exec: float = 0.0
     fading_state: Any = None
     designs: Optional[list] = None
+    wall_stage: float = 0.0
+    cohorts: Optional[list] = None
 
 
 def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
                     fading=None, flat: bool = False,
-                    sample_on_device: bool = True) -> Callable:
+                    sample_on_device: bool = True,
+                    cohort: bool = False) -> Callable:
     """One FL round as a pure function.
 
         body(scheme, eta, params, fading_state, key, data)
@@ -111,8 +121,17 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
     sampling law as the legacy host-numpy path).  The default full-batch
     path consumes keys and data identically to the legacy round function,
     so trajectories are bit-for-bit reproducible against it.
+
+    With ``cohort=True`` the body takes one extra operand —
+    ``co = {"gains": [N] active gains, "data_idx": [N] shard indices}`` —
+    and the round runs on the gathered active set instead of the closed-
+    over ``gains``/full ``data`` (DESIGN.md §Population).  Cohort arrays
+    are fixed-size [N] operands, never constants, so the compiled chunk is
+    reused across every cohort draw; the key stream is untouched, and a
+    cohort equal to the full device set gathers identity — bitwise the
+    non-cohort program's values.
     """
-    gains_j = jnp.asarray(gains)
+    gains_j = None if gains is None else jnp.asarray(gains)
 
     def device_grad(params, batch):
         g = jax.grad(loss_fn)(params, batch)
@@ -136,14 +155,7 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
         yb = jnp.take_along_axis(y_dev, idx, axis=1)
         return xb, yb
 
-    def body(scheme, eta, params, fading_state, key, data):
-        k_fade, k_ota, k_batch = jax.random.split(key, 3)
-        batch = sample(data, k_batch)
-        grads, norms = jax.vmap(lambda b: device_grad(params, b))(batch)
-        if fading is None:
-            h = ota.draw_fading(k_fade, gains_j)
-        else:
-            fading_state, h = fading.step(fading_state, k_fade)
+    def finish(scheme, eta, params, fading_state, k_ota, h, grads, norms):
         # coefficients once, threaded into both the aggregation and the
         # metrics — they can never disagree (bbfl_alternative randomizes
         # round_coeffs, so recomputing from a different key split would).
@@ -162,20 +174,54 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
         }
         return params, fading_state, metrics
 
-    return body
+    def body(scheme, eta, params, fading_state, key, data):
+        k_fade, k_ota, k_batch = jax.random.split(key, 3)
+        batch = sample(data, k_batch)
+        grads, norms = jax.vmap(lambda b: device_grad(params, b))(batch)
+        if fading is None:
+            h = ota.draw_fading(k_fade, gains_j)
+        else:
+            fading_state, h = fading.step(fading_state, k_fade)
+        return finish(scheme, eta, params, fading_state, k_ota, h, grads,
+                      norms)
+
+    def cohort_body(scheme, eta, params, fading_state, key, data, co):
+        k_fade, k_ota, k_batch = jax.random.split(key, 3)
+        active = jax.tree.map(lambda a: jnp.take(a, co["data_idx"], axis=0),
+                              data)
+        batch = sample(active, k_batch)
+        grads, norms = jax.vmap(lambda b: device_grad(params, b))(batch)
+        if fading is None:
+            h = ota.draw_fading(k_fade, co["gains"])
+        else:
+            fading_state, h = fading.step_cohort(fading_state, k_fade,
+                                                 co["gains"])
+        return finish(scheme, eta, params, fading_state, k_ota, h, grads,
+                      norms)
+
+    return cohort_body if cohort else body
 
 
-def chunk_lengths(num_rounds: int, eval_every: int,
-                  with_eval: bool) -> list:
+def chunk_lengths(num_rounds: int, eval_every: int, with_eval: bool,
+                  cohort_rounds: Optional[int] = None) -> list:
     """Scan chunk lengths whose boundaries hit the legacy eval cadence
     (t % eval_every == 0 or t == num_rounds - 1).  At most three distinct
     lengths occur — {1, eval_every, tail} — so at most three scan programs
-    ever compile per engine."""
+    ever compile per engine.
+
+    ``cohort_rounds`` adds population-cohort boundaries: the active set
+    changes BEFORE every round t with t % cohort_rounds == 0, so chunks
+    also end at rounds c*cohort_rounds - 1 (a cohort never straddles a
+    chunk).  The default schedule (None) leaves the chunk grid untouched —
+    cohort runs then redraw per chunk, i.e. at the eval cadence."""
     if num_rounds <= 0:
         return []
-    if not with_eval:
+    pts = set(range(0, num_rounds, eval_every)) if with_eval else set()
+    if cohort_rounds:
+        pts |= set(range(cohort_rounds - 1, num_rounds, cohort_rounds))
+    if not pts:
         return [num_rounds]
-    pts = sorted(set(range(0, num_rounds, eval_every)) | {num_rounds - 1})
+    pts = sorted(pts | {num_rounds - 1})
     lengths, prev = [], -1
     for t in pts:
         lengths.append(t - prev)
@@ -184,15 +230,21 @@ def chunk_lengths(num_rounds: int, eval_every: int,
 
 
 def _scan_chunk(round_body, scheme, eta, params, fading_state, key, data,
-                length: int):
+                length: int, cohort=None):
     """``length`` rounds of ``round_body`` under lax.scan; returns stacked
     per-round metrics.  The main key is split once per round, exactly like
-    the legacy host loop."""
+    the legacy host loop.  ``cohort`` (a cohort-body operand dict, see
+    ``make_round_body``) rides along as a scan constant — an operand of the
+    compiled chunk, so changing cohorts never recompiles."""
     def step(carry, _):
         params, fading_state, key = carry
         key, sub = jax.random.split(key)
-        params, fading_state, metrics = round_body(scheme, eta, params,
-                                                   fading_state, sub, data)
+        if cohort is None:
+            params, fading_state, metrics = round_body(
+                scheme, eta, params, fading_state, sub, data)
+        else:
+            params, fading_state, metrics = round_body(
+                scheme, eta, params, fading_state, sub, data, cohort)
         return (params, fading_state, key), metrics
 
     (params, fading_state, key), metrics = jax.lax.scan(

@@ -23,11 +23,14 @@ A placement exposes:
         layout the stacked schemes' design leaves for this placement
         (vmap broadcasts non-adaptive designs over seeds; sharding tiles
         every leaf to the full [K, S] grid so it can flatten to cells).
-    build_chunk(round_body, adaptive) -> chunk
+    build_chunk(round_body, adaptive, cohort=False) -> chunk
         chunk(stacked, etas, params_b, fstate_b, keys_b, data, length)
         -> (params_b, fstate_b, keys_b, metrics), everything with leading
         [K, S] grid axes either way — the driver never knows where the
-        cells ran.
+        cells ran.  With ``cohort=True`` the chunk takes one extra operand
+        before ``length`` — the staged cohort dict with [S, N] leaves
+        (per-seed active sets, shared across schemes) — and the cell
+        program is the engine's cohort body (DESIGN.md §Population).
     map_batch(fn, batch_tree) -> out_tree
         generic per-row map over a leading [B] batch axis — how
         ``solvers.solve_batch`` shards thousand-scenario SCA design
@@ -55,7 +58,7 @@ class Placement:
     def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
         raise NotImplementedError
 
-    def build_chunk(self, round_body, adaptive: bool):
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
         raise NotImplementedError
 
     def compile_batch(self, fn):
@@ -90,18 +93,34 @@ class VmapPlacement(Placement):
         # over the seed axis and vmap the scheme at both grid levels
         return tile_over_seeds(stacked, s_axis) if adaptive else stacked
 
-    def build_chunk(self, round_body, adaptive: bool):
-        def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
-                        length):
-            def cell(scheme, eta, params, fstate, key):
-                return _scan_chunk(round_body, scheme, eta, params, fstate,
-                                   key, data, length)
-            per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None,
-                                               None, 0, 0, 0))
-            per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
-            return per_cell(stacked, etas, params_b, fstate_b, keys_b)
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
+        if not cohort:
+            def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                            length):
+                def cell(scheme, eta, params, fstate, key):
+                    return _scan_chunk(round_body, scheme, eta, params,
+                                       fstate, key, data, length)
+                per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None,
+                                                   None, 0, 0, 0))
+                per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
+                return per_cell(stacked, etas, params_b, fstate_b, keys_b)
 
-        return jax.jit(fleet_chunk, static_argnames=("length",))
+            return jax.jit(fleet_chunk, static_argnames=("length",))
+
+        # cohort leaves are [S, N]: per-seed active sets (each seed row
+        # draws its own cohort), broadcast across the scheme axis
+        def cohort_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                         cohort_b, length):
+            def cell(scheme, eta, params, fstate, key, co):
+                return _scan_chunk(round_body, scheme, eta, params, fstate,
+                                   key, data, length, cohort=co)
+            per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None,
+                                               None, 0, 0, 0, 0))
+            per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0, None))
+            return per_cell(stacked, etas, params_b, fstate_b, keys_b,
+                            cohort_b)
+
+        return jax.jit(cohort_chunk, static_argnames=("length",))
 
     def compile_batch(self, fn):
         return jax.jit(jax.vmap(fn))
@@ -138,18 +157,32 @@ class ShardedPlacement(Placement):
         # carry the full [K, S] axes — adaptive or not
         return tile_over_seeds(stacked, s_axis)
 
-    def build_chunk(self, round_body, adaptive: bool):
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
         compiled = {}
 
-        def chunk(stacked, etas, params_b, fstate_b, keys_b, data, length):
+        if not cohort:
+            def chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                      length):
+                k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
+                fn = compiled.get((length, k, s))
+                if fn is None:
+                    fn = compiled[(length, k, s)] = self._compile(
+                        round_body, length, k, s)
+                return fn(stacked, etas, params_b, fstate_b, keys_b, data)
+
+            return chunk
+
+        def cohort_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
+                         cohort_b, length):
             k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
             fn = compiled.get((length, k, s))
             if fn is None:
-                fn = compiled[(length, k, s)] = self._compile(
+                fn = compiled[(length, k, s)] = self._compile_cohort(
                     round_body, length, k, s)
-            return fn(stacked, etas, params_b, fstate_b, keys_b, data)
+            return fn(stacked, etas, params_b, fstate_b, keys_b, data,
+                      cohort_b)
 
-        return chunk
+        return cohort_chunk
 
     def _compile(self, round_body, length: int, k: int, s: int):
         def cell(scheme, eta, params, fstate, key, data):
@@ -172,6 +205,40 @@ class ShardedPlacement(Placement):
                 jnp.broadcast_to(jnp.asarray(etas)[:, None], (k, s)), (k * s,))
             out = grid_call(flat(stacked), etas_f, flat(params_b),
                             flat(fstate_b), flat(keys_b), data)
+            return unflat(out)
+
+        return jax.jit(run)
+
+    def _compile_cohort(self, round_body, length: int, k: int, s: int):
+        # the [S, N] cohort leaves tile across the scheme axis and flatten
+        # to the same [K*S] cell axis as the carry, so each cell ships its
+        # own active set through the mesh (padded with cell 0 like every
+        # other sharded operand when K*S doesn't divide the device count)
+        def cell(scheme, eta, params, fstate, key, co, data):
+            return _scan_chunk(round_body, scheme, eta, params, fstate, key,
+                               data, length, cohort=co)
+
+        grid_call = distributed.shard_vmap(cell, self.mesh, self.axes,
+                                           num_sharded=6)
+
+        def run(stacked, etas, params_b, fstate_b, keys_b, data, cohort_b):
+            def flat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k * s,) + a.shape[2:]), tree)
+
+            def unflat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k, s) + a.shape[1:]), tree)
+
+            etas_f = jnp.reshape(
+                jnp.broadcast_to(jnp.asarray(etas)[:, None], (k, s)), (k * s,))
+            cohort_f = jax.tree.map(
+                lambda a: jnp.reshape(
+                    jnp.broadcast_to(jnp.asarray(a)[None],
+                                     (k,) + jnp.shape(a)),
+                    (k * s,) + jnp.shape(a)[1:]), cohort_b)
+            out = grid_call(flat(stacked), etas_f, flat(params_b),
+                            flat(fstate_b), flat(keys_b), cohort_f, data)
             return unflat(out)
 
         return jax.jit(run)

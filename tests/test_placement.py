@@ -15,6 +15,10 @@ Parity contract:
     the restart.
   * solvers.solve_batch sharded over the mesh matches the vmap batch to
     <= 1e-7 relative.
+  * population mode (cohort gains/data as jit operands, DESIGN.md
+    §Population) shards like any other fleet: host cohort draws are
+    placement-independent (bitwise), including grids that pad the mesh
+    and cohort sizes that don't divide the device count.
 
 The sharded tests need >= 4 host devices
 (XLA_FLAGS=--xla_force_host_platform_device_count=8; the CI
@@ -95,10 +99,11 @@ def _results_bitwise_histories(res_a, res_b):
     _compare_histories(res_a, res_b, exact=True)
 
 
-def _compare_histories(res_a, res_b, exact: bool):
+def _compare_histories(res_a, res_b, exact: bool,
+                       exact_traces=_EXACT_TRACES):
     assert set(res_a.traces) == set(res_b.traces)
     for k in res_a.traces:
-        if exact or k in _EXACT_TRACES:
+        if exact or k in exact_traces:
             assert np.array_equal(res_a.traces[k], res_b.traces[k]), k
         else:
             np.testing.assert_allclose(res_a.traces[k], res_b.traces[k],
@@ -318,6 +323,76 @@ def test_sharded_adaptive_resume_bitwise(markov_world, tmp_path):
     res_v = eng.run_fleet(*args, **kw)         # single-device reference
     _compare_histories(res_v, res_full, exact=False)
     assert _params_maxdiff(res_v.params, res_full.params) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# cohort axis through the placement layer (population mode)
+# ---------------------------------------------------------------------------
+
+# in population mode the per-round noise scales are computed INSIDE the
+# chunk from the cohort-gain operands (not precomputed host-side design
+# state), so like the other norm-derived traces they may round differently
+# per placement; only the key-stream dropout patterns stay bitwise
+_COHORT_EXACT_TRACES = ("active_devices",)
+
+
+@needs_mesh
+def test_sharded_cohort_fleet_matches_vmap(world):
+    """Population-mode adaptive_sca fleet (cohort gains/data as jit
+    operands, per-cohort host redesign) sharded over the 2x2 mesh vs the
+    single-device vmap placement: identical host cohort draws + design
+    trajectory, key-stream traces bitwise, norm-derived traces/params to
+    float rounding."""
+    dep, prm, data, params0, ev = world
+    spec = scn.PopulationSpec(
+        size=120, shadowing=scn.ShadowingSpec(sigma_db=6.0),
+        fading=channel.FadingSpec(family="rician", rician_k=3.0),
+        dynamics=scn.DynamicsSpec(rho=0.9), sampling="traffic", seed=11)
+    pop = scn.Population(spec=spec)
+    schemes = [pcm.make_power_control("adaptive_sca", dep, prm)]
+    run = FLRunConfig(eta=0.05, num_rounds=6, eval_every=3)
+    kw = dict(seeds=(0, 1), flat=False, population=pop, cohort_size=10,
+              cohort_rounds=2)
+    res_v = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, ev, **kw)
+    res_s = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, ev, **kw,
+                             placement=ShardedPlacement(make_debug_mesh(2, 2)))
+    assert res_s.traces["active_devices"].shape == (1, 2, run.num_rounds)
+    # cohort draws + redesigns are host-side and placement-independent
+    assert len(res_v.cohorts) == len(res_s.cohorts) == 3
+    for (ta, ia), (tb, ib) in zip(res_v.cohorts, res_s.cohorts):
+        assert ta == tb and np.array_equal(ia, ib)
+    assert len(res_v.designs) == len(res_s.designs) == 3
+    _compare_histories(res_v, res_s, exact=False,
+                       exact_traces=_COHORT_EXACT_TRACES)
+    assert _params_maxdiff(res_v.params, res_s.params) < 1e-6
+
+
+@needs_mesh
+def test_sharded_cohort_padding(world):
+    """Grid that doesn't fill the mesh (3 cells pad to 4 devices) with a
+    cohort size (10) that doesn't divide the device count (4): padded
+    cells are sliced off and the run matches the vmap placement."""
+    dep, prm, data, params0, ev = world
+    spec = scn.PopulationSpec(size=23, sampling="traffic", seed=5)
+    pop = scn.Population(spec=spec)
+    schemes = [pcm.make_power_control(n, dep, prm)
+               for n in ("sca", "ideal", "vanilla")]
+    run = FLRunConfig(eta=0.05, num_rounds=5, eval_every=2)
+    kw = dict(seeds=(3,), flat=False, population=pop, cohort_size=10,
+              cohort_rounds=2)
+    res_v = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, ev, **kw)
+    res_s = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                             data, run, ev, **kw,
+                             placement=ShardedPlacement(make_debug_mesh(2, 2)))
+    assert res_s.traces["active_devices"].shape == (3, 1, run.num_rounds)
+    for (ta, ia), (tb, ib) in zip(res_v.cohorts, res_s.cohorts):
+        assert ta == tb and np.array_equal(ia, ib)
+    _compare_histories(res_v, res_s, exact=False,
+                       exact_traces=_COHORT_EXACT_TRACES)
+    assert _params_maxdiff(res_v.params, res_s.params) < 1e-6
 
 
 # ---------------------------------------------------------------------------

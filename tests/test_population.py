@@ -1,0 +1,421 @@
+"""Population layer + streaming cohort driver (DESIGN.md §Population).
+
+Contracts pinned here:
+  * ``Population.draw_cohort`` is a pure counter-keyed function of
+    (population seed, run seed, tick): sorted, duplicate-free, in-range,
+    re-derivable on resume; n == size is the arange identity path.
+  * Under traffic weighting every device keeps a nonzero long-run
+    selection probability — the heavy tail biases draws, it never
+    starves anyone (the hypothesis property generalizes over sigma).
+  * Cohort chunks recompile NEVER: the cohort dict is a jit operand, so
+    five different draws hit one compiled program (cache-size assertion).
+  * cohort == population over a deployment-as-population is BITWISE the
+    pre-population ``run_fleet_task`` path on shrunk paper_mlp.
+  * stream=True (double-buffered staging) is BITWISE stream=False, and a
+    kill-and-resume mid-stream is BITWISE the uninterrupted run —
+    including Gauss-Markov re-entry states and adaptive_sca cohort
+    designs.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tasks
+from repro.core import channel, power_control as pcm, scenarios as scn
+from repro.data import partition, synthetic
+from repro.fl import driver, engine as eng
+from repro.fl.placement import VmapPlacement
+from repro.fl.server import FLRunConfig
+from repro.models import mlp
+from repro.models.param import init_params
+from tests.helpers import make_prm
+
+
+def _params_equal(a, b):
+    return all(bool(np.array_equal(np.asarray(x), np.asarray(y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _histories_bitwise(res_a, res_b):
+    assert set(res_a.traces) == set(res_b.traces)
+    for k in res_a.traces:
+        assert np.array_equal(res_a.traces[k], res_b.traces[k]), k
+    assert [t for t, _ in res_a.evals] == [t for t, _ in res_b.evals]
+    for (_, ea), (_, eb) in zip(res_a.evals, res_b.evals):
+        for k in ea:
+            assert np.array_equal(np.asarray(ea[k]), np.asarray(eb[k])), k
+
+
+def _cohorts_equal(a, b):
+    assert len(a) == len(b)
+    for (ta, ia), (tb, ib) in zip(a, b):
+        assert ta == tb and np.array_equal(ia, ib)
+
+
+def _traffic_pop(size=500, seed=7, rho=0.0, fading=None):
+    spec = scn.PopulationSpec(
+        size=size, shadowing=scn.ShadowingSpec(sigma_db=6.0),
+        fading=fading if fading is not None else channel.RAYLEIGH,
+        dynamics=scn.DynamicsSpec(rho=rho), sampling="traffic",
+        traffic_sigma=1.0, seed=seed)
+    return scn.Population(spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# cohort draws: pure, conserving, re-derivable
+# ---------------------------------------------------------------------------
+
+def test_draw_cohort_sample_conserving_and_pure():
+    pop = _traffic_pop(size=300)
+    for tick in (0, 1, 17):
+        for seed in (0, 3):
+            idx = pop.draw_cohort(20, tick, seed)
+            assert idx.shape == (20,) and idx.dtype == np.int64
+            assert len(np.unique(idx)) == 20          # without replacement
+            assert np.array_equal(idx, np.sort(idx))
+            assert 0 <= idx.min() and idx.max() < 300
+            # counter-keyed: a resumed driver re-derives the same draw
+            assert np.array_equal(idx, pop.draw_cohort(20, tick, seed))
+    a = pop.draw_cohort(20, 0, 0)
+    assert not np.array_equal(a, pop.draw_cohort(20, 1, 0))
+    assert not np.array_equal(a, pop.draw_cohort(20, 0, 1))
+
+
+def test_draw_cohort_full_population_is_identity():
+    for pop in (_traffic_pop(size=40),
+                scn.Population(gains_table=np.ones(40))):
+        assert np.array_equal(pop.draw_cohort(40, tick=5, seed=9),
+                              np.arange(40))
+
+
+def test_draw_cohort_bounds():
+    pop = _traffic_pop(size=10)
+    with pytest.raises(ValueError, match="cohort size"):
+        pop.draw_cohort(0, 0)
+    with pytest.raises(ValueError, match="cohort size"):
+        pop.draw_cohort(11, 0)
+
+
+def test_weighted_sampling_never_starves():
+    """Traffic weighting is heavy-tailed but every device has nonzero
+    long-run selection probability: the union of draws covers the whole
+    population."""
+    pop = _traffic_pop(size=60)
+    seen = set()
+    for tick in range(400):
+        seen.update(pop.draw_cohort(12, tick).tolist())
+        if len(seen) == 60:
+            break
+    assert len(seen) == 60, f"{60 - len(seen)} devices never selected"
+
+
+def test_weighted_sampling_property():
+    """Hypothesis generalization: any (size, cohort, sigma, tick) draw is
+    duplicate-free, sorted, in range, and deterministic in its key."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(size=st.integers(2, 200), frac=st.floats(0.05, 1.0),
+               sigma=st.floats(0.0, 3.0), tick=st.integers(0, 10_000),
+               seed=st.integers(0, 2**31 - 1))
+    def prop(size, frac, sigma, tick, seed):
+        n = max(1, min(size, int(size * frac)))
+        spec = scn.PopulationSpec(size=size, sampling="traffic",
+                                  traffic_sigma=sigma, seed=3)
+        pop = scn.Population(spec=spec)
+        idx = pop.draw_cohort(n, tick, seed)
+        assert idx.shape == (n,)
+        assert len(np.unique(idx)) == n
+        assert np.array_equal(idx, np.sort(idx))
+        assert 0 <= idx.min() and idx.max() < size
+        assert np.array_equal(idx, pop.draw_cohort(n, tick, seed))
+
+    prop()
+
+
+def test_lazy_gains_are_index_pure():
+    """gains_of hashes per device index: any index subset/order returns
+    the same per-device value (laziness can't depend on batch shape)."""
+    pop = _traffic_pop(size=1000)
+    idx = np.array([0, 7, 999, 512, 7])
+    g = pop.gains_of(idx)
+    assert g.shape == (5,) and np.all(g > 0)
+    assert g[1] == g[4]
+    for i, d in enumerate(idx):
+        assert g[i] == pop.gains_of(np.array([d]))[0]
+    full = pop.gains_of(np.arange(1000))
+    assert np.array_equal(full[idx], g)
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Markov re-entry aging
+# ---------------------------------------------------------------------------
+
+def test_reentry_table_aging():
+    rho = 0.9
+    pop = _traffic_pop(size=50, rho=rho,
+                       fading=channel.FadingSpec(family="rician",
+                                                 rician_k=2.0))
+    table = pop.init_table(1)
+    idx = np.array([3, 10, 42])
+
+    # never-seen devices get a fresh stationary draw, not zeros
+    s0 = pop.stage_states(table, 0, idx, t0=0, seed=1)
+    assert s0.dtype == np.complex64 and np.all(np.abs(s0) > 0)
+    pop.commit_states(table, 0, idx, t_end=4, state=s0)
+
+    # m = 0 (re-entering the round right after last seen): pass-through
+    back = pop.stage_states(table, 0, idx, t0=5, seed=1)
+    assert np.array_equal(back, s0)
+
+    # m missed rounds: decay rho^m toward a fresh stationary innovation,
+    # reproducible (counter-keyed) and different from pass-through
+    aged = pop.stage_states(table, 0, idx, t0=9, seed=1)
+    assert np.array_equal(aged, pop.stage_states(table, 0, idx, 9, seed=1))
+    assert not np.array_equal(aged, s0)
+    decay = rho ** 4
+    innov = (aged.astype(np.complex128) - decay * s0.astype(np.complex128)) \
+        / np.sqrt(1 - decay**2)
+    # the implied innovation is stationary-scaled: |w| ~ sqrt(diffuse)
+    diffuse = pop.gains_of(idx) / (2.0 + 1.0)
+    assert np.all(np.abs(innov) < 6 * np.sqrt(diffuse))
+
+    # a device another device's absence never ages: untouched rows stay -1
+    assert np.all(table["last"][0, [0, 1, 2]] == -1)
+
+
+# ---------------------------------------------------------------------------
+# recompilation-free cohort chunks
+# ---------------------------------------------------------------------------
+
+def test_cohort_chunks_do_not_recompile():
+    """Five different cohort draws through one fixed-shape compiled chunk:
+    the cohort dict is an operand, so the jit cache holds ONE entry."""
+    dep = channel.deploy(channel.WirelessConfig(num_devices=6, seed=0))
+    x, y, _, _ = synthetic.mnist_like(20, seed=0)
+    data = partition.stack_shards(partition.partition_by_label(x, y, 6,
+                                                               seed=0))
+    data = tuple(jnp.asarray(a) for a in data)
+    prm = make_prm(dep.gains, d=1000)
+    pc = pcm.make_power_control("sca", dep, prm)
+    stacked = pcm.stack_schemes([pc])
+    run = FLRunConfig(eta=0.05, num_rounds=2, eval_every=2)
+    params0 = init_params(mlp.mlp_defs(hidden=8), jax.random.PRNGKey(0))
+    body = eng.make_round_body(mlp.mlp_loss, dep.gains, run, flat=False,
+                               cohort=True)
+    chunk = VmapPlacement().build_chunk(body, adaptive=False, cohort=True)
+
+    pop = _traffic_pop(size=100)
+    params_b = jax.tree.map(
+        lambda a: jnp.tile(jnp.asarray(a)[None, None],
+                           (1, 1) + (1,) * jnp.ndim(a)), params0)
+    keys_b = jnp.tile(jax.random.PRNGKey(0)[None, None], (1, 1, 1))
+    etas = np.array([run.eta])
+    outs = []
+    for tick in range(5):
+        idx = pop.draw_cohort(6, tick)[None]              # [S=1, N]
+        cohort = {"gains": jnp.asarray(pop.gains_of(idx[0])[None]),
+                  "data_idx": jnp.asarray((idx % 6).astype(np.int32))}
+        params_b, _, keys_b, m = chunk(stacked, etas, params_b, None,
+                                       keys_b, data, cohort, length=2)
+        outs.append(np.asarray(m["active_devices"]))
+    assert chunk._cache_size() == 1, \
+        f"cohort swap recompiled: {chunk._cache_size()} cache entries"
+    assert len(outs) == 5
+
+
+# ---------------------------------------------------------------------------
+# cohort == population is the pre-population engine path, bitwise
+# ---------------------------------------------------------------------------
+
+def test_full_cohort_bitwise_matches_run_fleet_task():
+    task = tasks.get("paper_mlp", hidden=32, samples_per_class=20,
+                     test_per_class=10)
+    dep = channel.deploy(channel.WirelessConfig(
+        num_devices=task.num_devices, seed=0))
+    prm = make_prm(dep.gains, d=min(task.param_dim, 10000))
+    schemes = [pcm.make_power_control(n, dep, prm) for n in ("sca", "ideal")]
+    run = FLRunConfig(eta=0.05, num_rounds=6, eval_every=3)
+    kw = dict(flat=False, seeds=(0, 2))
+    res_ref = driver.run_fleet_task(task, schemes, dep.gains, run, **kw)
+    pop = scn.Population.from_deployment(dep)
+    # The cohort body is a DIFFERENT compiled program (gains/data arrive
+    # as operands, not baked constants).  On the default topology it is
+    # bitwise the pre-population path — the acceptance contract, pinned
+    # here under tier-1.  Forced multi-device topologies
+    # (--xla_force_host_platform_device_count) split the host's intra-op
+    # threads differently per program, so large reductions may round at
+    # ~1 ulp there; the key-stream traces must stay exact regardless.
+    exact = jax.device_count() == 1
+    for stream in (False, True):
+        res_pop = driver.run_fleet_task(
+            task, schemes, dep.gains, run, **kw, population=pop,
+            cohort_size=task.num_devices, stream=stream)
+        if exact:
+            assert _params_equal(res_ref.params, res_pop.params)
+            _histories_bitwise(res_ref, res_pop)
+        else:
+            assert np.array_equal(res_ref.traces["active_devices"],
+                                  res_pop.traces["active_devices"])
+            for k in res_ref.traces:
+                np.testing.assert_allclose(res_ref.traces[k],
+                                           res_pop.traces[k], rtol=1e-5,
+                                           atol=1e-6, err_msg=k)
+            for a, b in zip(jax.tree.leaves(res_ref.params),
+                            jax.tree.leaves(res_pop.params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+        # one draw per chunk, stamped at each chunk's first round (the
+        # eval-at-0/3/5 schedule chunks as [1, 3, 2] -> starts [0, 1, 4])
+        assert [t for t, _ in res_pop.cohorts] == [0, 1, 4]
+        for _, idx in res_pop.cohorts:
+            assert np.array_equal(idx,
+                                  np.tile(np.arange(task.num_devices),
+                                          (2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# streaming driver: overlap and preemption change nothing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cohort_world():
+    dep = channel.deploy(channel.WirelessConfig(num_devices=10, seed=0))
+    x, y, xt, yt = synthetic.mnist_like(40, seed=0)
+    data = partition.stack_shards(partition.partition_by_label(x, y, 10,
+                                                               seed=0))
+    prm = make_prm(dep.gains, d=10000)
+    params0 = init_params(mlp.mlp_defs(hidden=32), jax.random.PRNGKey(0))
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    ev = jax.jit(lambda p: {"acc": mlp.accuracy(p, xt_j, yt_j)})
+    pop = _traffic_pop(size=200, rho=0.9,
+                       fading=channel.FadingSpec(family="rician",
+                                                 rician_k=3.0))
+    return dep, prm, data, params0, ev, pop
+
+
+def test_stream_on_off_bitwise(cohort_world):
+    """Double-buffered staging vs serialized staging: same params, traces,
+    cohorts and Gauss-Markov re-entry — overlap only moves walls."""
+    dep, prm, data, params0, ev, pop = cohort_world
+    schemes = [pcm.make_power_control(n, dep, prm) for n in ("sca", "ideal")]
+    run = FLRunConfig(eta=0.05, num_rounds=9, eval_every=3)
+    kw = dict(seeds=(0, 2), flat=False, population=pop, cohort_size=10,
+              cohort_rounds=3)
+    res_on = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                              data, run, ev, **kw, stream=True)
+    res_off = driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains,
+                               data, run, ev, **kw, stream=False)
+    assert _params_equal(res_on.params, res_off.params)
+    _histories_bitwise(res_on, res_off)
+    _cohorts_equal(res_on.cohorts, res_off.cohorts)
+    # three distinct cohorts actually ran
+    assert len(res_on.cohorts) == 3
+    assert not np.array_equal(res_on.cohorts[0][1], res_on.cohorts[1][1])
+
+
+def test_stream_kill_and_resume_bitwise(cohort_world, tmp_path):
+    """Preempt the streaming loop at a chunk boundary mid-stream; the
+    resumed run re-derives the cohort draws and re-entry states and ends
+    bitwise identical to the uninterrupted stream."""
+    dep, prm, data, params0, ev, pop = cohort_world
+    schemes = [pcm.make_power_control(n, dep, prm) for n in ("sca", "ideal")]
+    run = FLRunConfig(eta=0.05, num_rounds=9, eval_every=3)
+    kw = dict(seeds=(0, 2), flat=False, population=pop, cohort_size=10,
+              cohort_rounds=3, stream=True)
+    args = (mlp.mlp_loss, params0, schemes, dep.gains, data, run, ev)
+    path = os.path.join(tmp_path, "fleet")
+    res_full = driver.run_fleet(*args, **kw)
+    res_part = driver.run_fleet(*args, **kw, checkpoint_path=path,
+                                max_chunks=1)
+    assert res_part.traces["active_devices"].shape[-1] < run.num_rounds
+    res_res = driver.run_fleet(*args, **kw, checkpoint_path=path,
+                               resume=True)
+    assert _params_equal(res_full.params, res_res.params)
+    _histories_bitwise(res_full, res_res)
+    _cohorts_equal(res_full.cohorts, res_res.cohorts)
+
+
+def test_adaptive_cohort_redesign_streams_bitwise(cohort_world, tmp_path):
+    """adaptive_sca in population mode re-solves (P1) on each incoming
+    cohort's statistical CSI: the design trajectory moves across cohorts,
+    is identical stream on/off, and survives kill-and-resume bitwise."""
+    dep, prm, data, params0, ev, pop = cohort_world
+    pc = pcm.make_power_control("adaptive_sca", dep, prm)
+    assert pc.redesign_cohort_fn is not None
+    run = FLRunConfig(eta=0.05, num_rounds=8, eval_every=4)
+    kw = dict(seeds=(0,), flat=False, population=pop, cohort_size=10,
+              cohort_rounds=2)
+    args = (mlp.mlp_loss, params0, [pc], dep.gains, data, run, ev)
+    res_on = driver.run_fleet(*args, **kw, stream=True)
+    res_off = driver.run_fleet(*args, **kw, stream=False)
+    assert _params_equal(res_on.params, res_off.params)
+    assert len(res_on.designs) == len(res_off.designs) == 4
+    for (ta, ga), (tb, gb) in zip(res_on.designs, res_off.designs):
+        assert ta == tb and np.array_equal(ga, gb)
+    g0 = np.asarray(res_on.designs[0][1])
+    assert not all(np.array_equal(g0, np.asarray(g))
+                   for _, g in res_on.designs[1:])
+
+    path = os.path.join(tmp_path, "fleet")
+    driver.run_fleet(*args, **kw, stream=True, checkpoint_path=path,
+                     max_chunks=2)
+    res_res = driver.run_fleet(*args, **kw, stream=True,
+                               checkpoint_path=path, resume=True)
+    assert _params_equal(res_on.params, res_res.params)
+    assert len(res_on.designs) == len(res_res.designs)
+    for (ta, ga), (tb, gb) in zip(res_on.designs, res_res.designs):
+        assert ta == tb and np.array_equal(ga, gb)
+
+
+def test_population_checkpoint_identity_rejects_mismatch(cohort_world,
+                                                         tmp_path):
+    """The population schedule is part of the checkpoint identity: a
+    resume with a different cohort size or population is rejected."""
+    dep, prm, data, params0, ev, pop = cohort_world
+    schemes = [pcm.make_power_control("sca", dep, prm)]
+    run = FLRunConfig(eta=0.05, num_rounds=4, eval_every=2)
+    args = (mlp.mlp_loss, params0, schemes, dep.gains, data, run, ev)
+    kw = dict(flat=False, population=pop, cohort_size=10)
+    path = os.path.join(tmp_path, "fleet")
+    driver.run_fleet(*args, **kw, checkpoint_path=path, max_chunks=1)
+    other = _traffic_pop(size=201, rho=0.9,
+                         fading=channel.FadingSpec(family="rician",
+                                                   rician_k=3.0))
+    with pytest.raises(ValueError, match="population"):
+        driver.run_fleet(*args, flat=False, population=other,
+                         cohort_size=10, checkpoint_path=path, resume=True)
+    with pytest.raises(ValueError, match="cohort_rounds"):
+        driver.run_fleet(*args, **kw, cohort_rounds=2,
+                         checkpoint_path=path, resume=True)
+
+
+def test_cohort_size_must_match_scheme_design(cohort_world):
+    dep, prm, data, params0, ev, pop = cohort_world
+    schemes = [pcm.make_power_control("sca", dep, prm)]    # 10-device world
+    run = FLRunConfig(eta=0.05, num_rounds=2, eval_every=2)
+    with pytest.raises(ValueError, match="cohort"):
+        driver.run_fleet(mlp.mlp_loss, params0, schemes, dep.gains, data,
+                         run, ev, flat=False, population=pop, cohort_size=7)
+
+
+# ---------------------------------------------------------------------------
+# chunk schedule: cohorts never straddle a chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e,c", [(9, 3, 3), (10, 4, 3), (12, 5, 4),
+                                   (7, 10, 2), (6, 2, 6)])
+def test_chunk_lengths_insert_cohort_boundaries(t, e, c):
+    lengths = eng.chunk_lengths(t, e, with_eval=True, cohort_rounds=c)
+    assert sum(lengths) == t and all(ln >= 1 for ln in lengths)
+    ends = set(np.cumsum(lengths).tolist())
+    # every eval round and every cohort's last round ends a chunk
+    assert {r + 1 for r in range(t) if r % e == 0 or r == t - 1} <= ends
+    assert {min(k + c, t) for k in range(0, t, c)} <= ends
+    # and cohort_rounds=None keeps the old schedule exactly
+    assert eng.chunk_lengths(t, e, True) == eng.chunk_lengths(
+        t, e, True, cohort_rounds=None)
