@@ -145,7 +145,7 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
         with_result: bool = False, task="paper_mlp",
         checkpoint_path=None, resume: bool = False,
         population: int = 0, cohort=None, cohort_rounds=None,
-        stream: bool = True, max_chunks=None):
+        stream: bool = True, max_chunks=None, telemetry=None):
     """Fig.-2-style histories for all schemes on the given task.
 
     engine="fleet": one compiled scan program for the whole scheme grid,
@@ -167,6 +167,11 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
     docstring); cohort defaults to the task's device count.
     with_result=True also returns the driver's FLResult (the honest
     wall_compile/wall_exec split for --bench).
+    telemetry turns on the fleet telemetry subsystem (fleet engine only):
+    True writes events.jsonl + bias--variance diagnostics into the task's
+    artifact dir with the task's kappa^2 (render with
+    ``python -m repro.telemetry.report <artifact_dir>``); a string or a
+    ``repro.telemetry.Telemetry`` selects the run dir explicitly.
     """
     task = _task(task)
     if batch_size is None:
@@ -183,6 +188,14 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
     params0 = task.init_params(seed)
     evals = task.make_eval(td)
 
+    telemetry = telemetry or None
+    if telemetry is not None and engine != "fleet":
+        raise ValueError("telemetry needs the fleet engine")
+    if telemetry is True:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry(run_dir=artifact_dir(task),
+                              kappa_sq=float(prm.kappa_sq))
+
     res = None
     if engine == "fleet":
         run_cfg = task.run_config(num_rounds=num_rounds,
@@ -194,7 +207,8 @@ def run(num_rounds: int = 150, eval_every: int = 10, seed: int = 0,
                              flat=batch_size > 0, log=log,
                              placement=placement,
                              checkpoint_path=checkpoint_path, resume=resume,
-                             max_chunks=max_chunks, **pop_kw)
+                             max_chunks=max_chunks, telemetry=telemetry,
+                             **pop_kw)
         histories = _fleet_histories(res, res.wall)
     elif engine == "legacy":
         histories = {}
@@ -496,6 +510,12 @@ def population_benchmark(task="paper_mlp", size: int = 1_000_000,
                    "stream_stage": round(res_st.wall_stage, 2),
                    "serial_stage": round(res_se.wall_stage, 2),
                    "stream_compile": round(res_st.wall_compile, 2)},
+        # per-chunk staging walls (FLResult.stage_walls): where inside the
+        # run the staging lane spent its time, stream vs serialized — the
+        # chunk-resolved half of the wall_s aggregates above
+        "stage_chunks_s": {
+            "stream": [round(w, 4) for w in res_st.stage_walls],
+            "serial": [round(w, 4) for w in res_se.stage_walls]},
         "rounds_per_sec": round(num_rounds / max(res_st.wall_exec, 1e-9), 3),
         "overlap_saving_s": round(res_se.wall_exec - res_st.wall_exec, 2),
         "stream_bitwise": bool(stream_eq),
@@ -628,6 +648,10 @@ def main(argv=None) -> None:
     ap.add_argument("--cohort-rounds", type=int, default=None,
                     help="redraw the cohort every R rounds (default: once "
                          "per chunk, i.e. the eval cadence)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="write events.jsonl + bias-variance diagnostics "
+                         "into the task's artifact dir; render with "
+                         "python -m repro.telemetry.report <dir>")
     ap.add_argument("--no-stream", action="store_true",
                     help="serialize cohort staging instead of double-"
                          "buffering it against the executing chunk "
@@ -655,6 +679,9 @@ def main(argv=None) -> None:
     if args.population and (args.legacy or args.sharded):
         raise SystemExit("--population applies to the vmap fleet engine; "
                          "drop --legacy/--sharded")
+    if args.telemetry and (args.legacy or args.bench or args.bench_placement):
+        raise SystemExit("--telemetry applies to the fleet engine only; "
+                         "drop --legacy/--bench/--bench-placement")
     if args.bench:
         benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
                   seed=args.seed, task=task,
@@ -684,7 +711,8 @@ def main(argv=None) -> None:
                checkpoint_path=ckpt_path, resume=args.resume,
                population=args.population, cohort=args.cohort,
                cohort_rounds=args.cohort_rounds,
-               stream=not args.no_stream, max_chunks=args.max_chunks)
+               stream=not args.no_stream, max_chunks=args.max_chunks,
+               telemetry=args.telemetry)
     for row in summarize(hist):
         print(row)
 

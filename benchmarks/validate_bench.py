@@ -12,6 +12,12 @@ Uses ``jsonschema`` when importable; otherwise falls back to a minimal
 built-in checker covering the subset the schema actually uses (type,
 required, properties, additionalProperties, items, minimum /
 exclusiveMinimum, minItems) — no new dependencies either way.
+
+Beyond the shape, one semantic invariant is checked: the per-chunk
+staging breakdown ``population.stage_chunks_s`` (when present) must sum
+back to the ``population.wall_s.{stream,serial}_stage`` aggregates it
+refines — a breakdown that doesn't reconcile with its own total is a
+recording bug, not a perf change.
 """
 from __future__ import annotations
 
@@ -69,6 +75,29 @@ def _check(obj, schema: dict, path: str, errors: list) -> None:
                           f"{schema['exclusiveMinimum']}")
 
 
+def _check_stage_chunks(summary: dict, errors: list) -> None:
+    """population.stage_chunks_s must reconcile with the wall_s aggregates
+    (each chunk wall rounds to 4 decimals, the aggregate to 2)."""
+    pop = summary.get("population")
+    if not isinstance(pop, dict):
+        return
+    chunks = pop.get("stage_chunks_s")
+    walls = pop.get("wall_s")
+    if not isinstance(chunks, dict) or not isinstance(walls, dict):
+        return
+    for mode in ("stream", "serial"):
+        per_chunk = chunks.get(mode)
+        total = walls.get(f"{mode}_stage")
+        if not isinstance(per_chunk, list) or total is None:
+            continue
+        tol = 0.01 + 5e-5 * len(per_chunk)       # rounding headroom
+        if abs(sum(per_chunk) - total) > tol:
+            errors.append(
+                f"population/stage_chunks_s/{mode}: chunks sum to "
+                f"{sum(per_chunk):.4f}s but wall_s.{mode}_stage is "
+                f"{total}s")
+
+
 def validate(summary_path: str = DEFAULT_SUMMARY,
              schema_path: str = SCHEMA) -> list:
     """Return a list of violation strings (empty = valid)."""
@@ -81,10 +110,13 @@ def validate(summary_path: str = DEFAULT_SUMMARY,
     except ImportError:
         errors: list = []
         _check(summary, schema, "", errors)
+        _check_stage_chunks(summary, errors)
         return errors
     validator = jsonschema.Draft7Validator(schema)
-    return [f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
-            f"{e.message}" for e in validator.iter_errors(summary)]
+    errors = [f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
+              f"{e.message}" for e in validator.iter_errors(summary)]
+    _check_stage_chunks(summary, errors)
+    return errors
 
 
 def main(argv=None) -> None:

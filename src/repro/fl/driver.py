@@ -30,6 +30,7 @@ needs no RNG cursor: a restart re-derives every draw from the chunk index.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import os
 import time
@@ -40,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tlm
 from repro.checkpoint import checkpoint as ckpt
 from repro.core.power_control import _scheme_n, stack_schemes
 from repro.fl.engine import (FADING_INIT_SALT, FLResult, _concat_traces,
@@ -196,7 +198,7 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
               max_chunks: Optional[int] = None, population=None,
               cohort_size: Optional[int] = None,
               cohort_rounds: Optional[int] = None,
-              stream: bool = True) -> FLResult:
+              stream: bool = True, telemetry=None) -> FLResult:
     """A [K-scheme x S-seed] experiment grid through a hardware placement.
 
     The grid/scheme/seed/eta semantics are ``engine.run_fleet``'s (which
@@ -236,6 +238,12 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                      current chunk executes, so redesign latency hides
                      behind device time.  ``stream=False`` runs the same
                      stages serially — bitwise-identical results.
+    telemetry        a ``telemetry.Telemetry`` (or a bare run-dir string)
+                     turns on structured JSONL run tracing and the
+                     in-graph bias–variance diagnostics riding
+                     ``traces`` (DESIGN.md §Telemetry).  ``None``
+                     (default) compiles and runs the exact pre-telemetry
+                     program — bitwise, not just numerically.
 
     Adaptive schemes (``power_control.AdaptiveSCA``) re-design BETWEEN
     chunks from the live fading state, whatever the placement: the state
@@ -283,10 +291,30 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     stacked = placement.prepare_schemes(stacked, s_axis,
                                         adaptive or pop_adaptive)
 
+    tel = tlm.Telemetry(run_dir=telemetry) if isinstance(telemetry, str) \
+        else telemetry
+    resuming = bool(checkpoint_path and resume
+                    and os.path.exists(_ckpt_file(checkpoint_path)))
+    # fresh=False keeps the existing event log: the resumed process reads
+    # the run id back and ``tracer.resume`` prunes the superseded suffix
+    tracer = tlm.Tracer(tel.run_dir, fresh=not resuming) \
+        if tel is not None and tel.trace else None
+    metrics_hook = tlm.make_metrics_hook(tel.kappa_sq) \
+        if tel is not None and tel.diagnostics else None
+
+    def _span(kind, **fields):
+        return tracer.span(kind, **fields) if tracer is not None \
+            else contextlib.nullcontext()
+
+    def _ctx(**fields):
+        return tracer.ctx(**fields) if tracer is not None \
+            else contextlib.nullcontext()
+
     round_body = make_round_body(loss_fn, gains, run, fading=fading,
-                                 flat=flat, cohort=pop_mode)
+                                 flat=flat, cohort=pop_mode,
+                                 metrics_hook=metrics_hook)
     chunk = placement.build_chunk(round_body, adaptive or pop_adaptive,
-                                  cohort=pop_mode)
+                                  cohort=pop_mode, tracer=tracer)
 
     data = tuple(jnp.asarray(a) for a in data)
     params_b = jax.tree.map(
@@ -340,27 +368,36 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         # everything here is pure in (population, seeds, tick) and the
         # schemes' static problem constants — NEVER in chunk outputs — so
         # running it concurrently with the executing chunk (stream=True)
-        # cannot change any number, only walls
+        # cannot change any number, only walls.  The tracer ctx tags the
+        # worker thread's events (the cohort redesign's ``sca_solve``)
+        # with this chunk index, which is what lets ``tracer.resume``
+        # prune them correctly after a preemption.
         ts = time.time()
-        tick = _tick_of(ci)
-        idx = np.stack([population.draw_cohort(n_cohort, tick, s)
-                        for s in seeds])                          # [S, N]
-        gains_sn = np.stack([population.gains_of(r) for r in idx])
-        cohort_b = {"gains": jnp.asarray(gains_sn),
-                    "data_idx": jnp.asarray((idx % n_shards)
-                                            .astype(np.int32))}
-        new_stacked = None
-        fresh = ci == 0 or tick != _tick_of(ci - 1)
-        if pop_adaptive and fresh:
-            gains_ksn = np.broadcast_to(
-                gains_sn[None], (k,) + gains_sn.shape).copy()
-            if stage_dev is not None:
-                with jax.default_device(stage_dev):
+        with _ctx(chunk=ci):
+            tick = _tick_of(ci)
+            idx = np.stack([population.draw_cohort(n_cohort, tick, s)
+                            for s in seeds])                      # [S, N]
+            gains_sn = np.stack([population.gains_of(r) for r in idx])
+            cohort_b = {"gains": jnp.asarray(gains_sn),
+                        "data_idx": jnp.asarray((idx % n_shards)
+                                                .astype(np.int32))}
+            new_stacked = None
+            fresh = ci == 0 or tick != _tick_of(ci - 1)
+            if pop_adaptive and fresh:
+                gains_ksn = np.broadcast_to(
+                    gains_sn[None], (k,) + gains_sn.shape).copy()
+                if stage_dev is not None:
+                    with jax.default_device(stage_dev):
+                        new_stacked = redesign_cohort(base, gains_ksn)
+                else:
                     new_stacked = redesign_cohort(base, gains_ksn)
-            else:
-                new_stacked = redesign_cohort(base, gains_ksn)
-        return _Staged(ci=ci, tick=tick, idx=idx, cohort=cohort_b,
-                       stacked=new_stacked, wall=time.time() - ts)
+        staged = _Staged(ci=ci, tick=tick, idx=idx, cohort=cohort_b,
+                         stacked=new_stacked, wall=time.time() - ts)
+        if tracer is not None:
+            tracer.event("stage", chunk=ci, tick=tick,
+                         dur=round(staged.wall, 6),
+                         redesigned=new_stacked is not None)
+        return staged
 
     identity = None
     if checkpoint_path is not None:
@@ -368,8 +405,7 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                                    gains, data, fading, population,
                                    n_cohort, cohort_cadence)
     start_chunk = 0
-    if checkpoint_path and resume \
-            and os.path.exists(_ckpt_file(checkpoint_path)):
+    if resuming:
         (start_chunk, t, stacked, params_b, fading_state, keys_b,
          metric_chunks, evals, designs, loaded_cohorts) = _load_fleet_state(
             checkpoint_path, stacked, params_b, fading_state, keys_b,
@@ -379,6 +415,19 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         if log:
             print(f"# resumed fleet from {checkpoint_path} at chunk "
                   f"{start_chunk} (round {t})")
+    if tracer is not None:
+        if resuming:
+            # drop events from chunks the preempted process started but
+            # this one will re-run, so the log describes ONE consistent
+            # execution (no duplicate chunk spans after a kill+resume)
+            tracer.resume(start_chunk)
+        tracer.event("fleet_config", names=list(names), seeds=list(seeds),
+                     num_rounds=int(run.num_rounds),
+                     eval_every=int(run.eval_every),
+                     placement=placement.describe(), chunks=len(lengths),
+                     population=(int(population.size) if pop_mode else None),
+                     cohort_size=n_cohort, cohort_rounds=cohort_cadence,
+                     stream=bool(stream), start_chunk=start_chunk)
     last_tick = _tick_of(start_chunk - 1) \
         if pop_mode and start_chunk > 0 else None
 
@@ -386,17 +435,32 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         if pop_mode and stream else None
     staged = next_fut = None
     wall_stage = 0.0
+    stage_walls = [] if pop_mode else None
     wall_compile, first = 0.0, True
+    prev_hook, hook_set = None, False
+    if tracer is not None:
+        from repro.solvers import sca_jax
+        prev_hook = sca_jax.set_trace_hook(
+            lambda rec: tracer.event("sca_solve", **rec))
+        hook_set = True
     try:
         for ci, length in enumerate(lengths):
             if ci < start_chunk:
                 continue
             if pop_mode:
                 if next_fut is not None:
+                    tw = time.time()
                     staged, next_fut = next_fut.result(), None
+                    if tracer is not None:
+                        # visible staging latency: how long the driver sat
+                        # waiting on the double buffer (0 when staging hid
+                        # completely behind the previous chunk)
+                        tracer.event("stage_wait", chunk=staged.ci,
+                                     dur=round(time.time() - tw, 6))
                 if staged is None or staged.ci != ci:
                     staged = _stage(ci, stacked)
                 wall_stage += staged.wall
+                stage_walls.append(staged.wall)
                 t_start = int(starts[ci])
                 if staged.tick != last_tick:
                     last_tick = staged.tick
@@ -404,6 +468,22 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                     if pop_adaptive:
                         stacked = staged.stacked
                         designs.append((t_start, np.asarray(stacked.gamma)))
+                    if tracer is not None:
+                        rec = {"chunk": ci, "t": t_start,
+                               "tick": staged.tick,
+                               "cohort_size": int(staged.idx.shape[1])}
+                        if pop_table is not None:
+                            # per-device staleness off the re-entry table
+                            # BEFORE staging touches it: rounds since each
+                            # drawn device last participated (-1 = never)
+                            seen = np.stack(
+                                [pop_table["last"][si, staged.idx[si]]
+                                 for si in range(s_axis)])
+                            rec["staleness"] = np.where(
+                                seen < 0, -1,
+                                np.maximum(t_start - 1 - seen, 0))
+                            rec["never_seen"] = int(np.sum(seen < 0))
+                        tracer.event("cohort", **rec)
                 if fading is not None:
                     # re-entry staging reads the table committed by the
                     # PREVIOUS chunk, so it stays serialized (it is a [N]
@@ -425,13 +505,24 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                     # the chunk returns — the cohort draw and SCA redesign
                     # overlap device execution instead of serializing
                     next_fut = executor.submit(_stage, ci + 1, stacked)
-                params_b, fading_state, keys_b, metrics = chunk(
-                    stacked, etas, params_b, fading_state, keys_b, data,
-                    staged.cohort, length=length)
-            else:
-                params_b, fading_state, keys_b, metrics = chunk(
-                    stacked, etas, params_b, fading_state, keys_b, data,
-                    length=length)
+            with _ctx(chunk=ci):
+                t_ex = time.monotonic()
+                if pop_mode:
+                    params_b, fading_state, keys_b, metrics = chunk(
+                        stacked, etas, params_b, fading_state, keys_b, data,
+                        staged.cohort, length=length)
+                else:
+                    params_b, fading_state, keys_b, metrics = chunk(
+                        stacked, etas, params_b, fading_state, keys_b, data,
+                        length=length)
+                if tracer is not None:
+                    # the block makes dur the true device wall (dispatch is
+                    # async); telemetry-off keeps the async pipeline as-is
+                    jax.block_until_ready(params_b)
+                    tracer.event("chunk_exec", chunk=ci, length=int(length),
+                                 t_start=t,
+                                 cache_size=tlm.chunk_cache_size(chunk),
+                                 dur=round(time.monotonic() - t_ex, 6))
             if first:
                 jax.block_until_ready(params_b)
                 wall_compile = time.time() - t0
@@ -450,10 +541,14 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                 # must see one replicated array, not a mesh-sharded one, so
                 # the new design is bitwise the same whatever placement ran
                 # the chunk
-                stacked = redesign(stacked, fading, np.asarray(fading_state))
+                with _ctx(chunk=ci), _span("redesign", chunk=ci, t=t):
+                    stacked = redesign(stacked, fading,
+                                       np.asarray(fading_state))
                 designs.append((t, np.asarray(stacked.gamma)))
             if eval_b is not None:
-                ev = {kk: np.asarray(v) for kk, v in eval_b(params_b).items()}
+                with _span("eval", chunk=ci, t=t - 1):
+                    ev = {kk: np.asarray(v)
+                          for kk, v in eval_b(params_b).items()}
                 evals.append((t - 1, ev))
                 if log:
                     lead = next(iter(ev))
@@ -461,23 +556,31 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                            **{n: round(float(ev[lead][i, 0]), 4)
                               for i, n in enumerate(names)}})
             if checkpoint_path is not None:
-                _save_fleet_state(checkpoint_path, ci + 1, t, stacked,
-                                  params_b, fading_state, keys_b,
-                                  metric_chunks, evals, designs, identity,
-                                  pop_table, cohorts)
+                with _span("ckpt_save", chunk=ci):
+                    _save_fleet_state(checkpoint_path, ci + 1, t, stacked,
+                                      params_b, fading_state, keys_b,
+                                      metric_chunks, evals, designs, identity,
+                                      pop_table, cohorts)
             if max_chunks is not None and ci + 1 - start_chunk >= max_chunks \
                     and ci + 1 < len(lengths):
                 break        # preempted on purpose; resume=True continues
     finally:
+        if hook_set:
+            sca_jax.set_trace_hook(prev_hook)
         if executor is not None:
             executor.shutdown(wait=True)
 
     wall = time.time() - t0
+    if tracer is not None:
+        tracer.event("run_end", rounds_done=int(t),
+                     chunks_done=(ci + 1 if lengths else 0),
+                     wall_s=round(wall, 3), wall_stage=round(wall_stage, 3))
     return FLResult(params=params_b, traces=_concat_traces(metric_chunks),
                     evals=evals, names=names, seeds=seeds, wall=wall,
                     wall_compile=wall_compile, wall_exec=wall - wall_compile,
                     fading_state=fading_state, designs=designs,
-                    wall_stage=wall_stage, cohorts=cohorts)
+                    wall_stage=wall_stage, cohorts=cohorts,
+                    stage_walls=stage_walls)
 
 
 def _scheme_names(schemes) -> list:

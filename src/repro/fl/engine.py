@@ -86,6 +86,10 @@ class FLResult:
     cohorts       population-run cohort trace: [(round, idx [S, N])] with
                   entry (t, idx) meaning those device indices are active
                   from round t (None for full-participation runs)
+    stage_walls   per-chunk staging seconds (``wall_stage`` is their sum)
+                  for the chunks THIS invocation executed — the
+                  streaming-lane profile benchmarks and telemetry consume
+                  (None for full-participation runs)
     """
     params: PyTree
     traces: dict
@@ -99,12 +103,14 @@ class FLResult:
     designs: Optional[list] = None
     wall_stage: float = 0.0
     cohorts: Optional[list] = None
+    stage_walls: Optional[list] = None
 
 
 def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
                     fading=None, flat: bool = False,
                     sample_on_device: bool = True,
-                    cohort: bool = False) -> Callable:
+                    cohort: bool = False,
+                    metrics_hook: Optional[Callable] = None) -> Callable:
     """One FL round as a pure function.
 
         body(scheme, eta, params, fading_state, key, data)
@@ -130,6 +136,13 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
     reused across every cohort draw; the key stream is untouched, and a
     cohort equal to the full device set gathers identity — bitwise the
     non-cohort program's values.
+
+    ``metrics_hook`` (DESIGN.md §Telemetry) extends the per-round metrics
+    dict: called as ``hook(s=..., noise_scale=..., h=..., params=...)``
+    with the realized OTA coefficients right after they are fixed, it
+    returns extra scalar traces (the in-graph bias-variance diagnostics).
+    The default ``None`` leaves the round body — and therefore the
+    compiled chunk — literally unchanged: the bitwise-off guarantee.
     """
     gains_j = None if gains is None else jnp.asarray(gains)
 
@@ -172,6 +185,9 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
             "active_devices": jnp.sum((s > 0).astype(jnp.float32)),
             "noise_scale": jnp.asarray(noise_scale, jnp.float32),
         }
+        if metrics_hook is not None:
+            metrics.update(metrics_hook(s=s, noise_scale=noise_scale, h=h,
+                                        params=params))
         return params, fading_state, metrics
 
     def body(scheme, eta, params, fading_state, key, data):
@@ -255,8 +271,12 @@ def _scan_chunk(round_body, scheme, eta, params, fading_state, key, data,
 def _concat_traces(chunks: list) -> dict:
     if not chunks:
         return {}
+    # intersect on the first chunk's keys: a resume that toggled the
+    # telemetry diagnostics mid-run degrades to the common traces instead
+    # of KeyError-ing (the diagnostic keys are additive, never load-bearing)
+    keys = [k for k in chunks[0] if all(k in c for c in chunks)]
     return {k: np.concatenate([np.asarray(c[k]) for c in chunks], axis=-1)
-            for k in chunks[0]}
+            for k in keys}
 
 
 def run_rounds(loss_fn: Callable, params: PyTree, scheme: PowerControl,

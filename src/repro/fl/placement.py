@@ -23,7 +23,7 @@ A placement exposes:
         layout the stacked schemes' design leaves for this placement
         (vmap broadcasts non-adaptive designs over seeds; sharding tiles
         every leaf to the full [K, S] grid so it can flatten to cells).
-    build_chunk(round_body, adaptive, cohort=False) -> chunk
+    build_chunk(round_body, adaptive, cohort=False, tracer=None) -> chunk
         chunk(stacked, etas, params_b, fstate_b, keys_b, data, length)
         -> (params_b, fstate_b, keys_b, metrics), everything with leading
         [K, S] grid axes either way — the driver never knows where the
@@ -31,6 +31,13 @@ A placement exposes:
         before ``length`` — the staged cohort dict with [S, N] leaves
         (per-seed active sets, shared across schemes) — and the cell
         program is the engine's cohort body (DESIGN.md §Population).
+        Every chunk exposes ``_cache_size()`` — the number of compiled
+        programs behind it (the jit trace cache here, the explicit
+        per-(length, grid) dict on the sharded path) — which
+        ``telemetry.assert_no_recompile`` audits.  ``tracer`` (a
+        ``telemetry.Tracer``) emits a ``chunk_compile`` span whenever a
+        call grows that cache; ``None`` (default) returns the exact
+        pre-telemetry callable, bitwise.
     map_batch(fn, batch_tree) -> out_tree
         generic per-row map over a leading [B] batch axis — how
         ``solvers.solve_batch`` shards thousand-scenario SCA design
@@ -39,6 +46,7 @@ A placement exposes:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -52,13 +60,34 @@ from repro.launch.mesh import grid_axes
 PyTree = Any
 
 
+def _traced_compiles(chunk, tracer):
+    """Wrap a chunk so calls that grow its compile cache emit a
+    ``chunk_compile`` span (the jit call traces + compiles synchronously;
+    execution stays async, so the call duration on a cache-miss call IS
+    the compile wall to within dispatch noise).  The wrapper changes no
+    operand, shape or key stream — only observation."""
+    def traced(*args, length):
+        before = chunk._cache_size()
+        t0 = time.monotonic()
+        out = chunk(*args, length=length)
+        after = chunk._cache_size()
+        if after > before:
+            tracer.event("chunk_compile", dur=round(time.monotonic() - t0, 6),
+                         length=int(length), cache_size=after)
+        return out
+
+    traced._cache_size = chunk._cache_size
+    return traced
+
+
 class Placement:
     """Interface marker; see module docstring for the contract."""
 
     def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
         raise NotImplementedError
 
-    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
+                    tracer=None):
         raise NotImplementedError
 
     def compile_batch(self, fn):
@@ -93,7 +122,8 @@ class VmapPlacement(Placement):
         # over the seed axis and vmap the scheme at both grid levels
         return tile_over_seeds(stacked, s_axis) if adaptive else stacked
 
-    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
+                    tracer=None):
         if not cohort:
             def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
                             length):
@@ -105,7 +135,9 @@ class VmapPlacement(Placement):
                 per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
                 return per_cell(stacked, etas, params_b, fstate_b, keys_b)
 
-            return jax.jit(fleet_chunk, static_argnames=("length",))
+            chunk = jax.jit(fleet_chunk, static_argnames=("length",))
+            return chunk if tracer is None \
+                else _traced_compiles(chunk, tracer)
 
         # cohort leaves are [S, N]: per-seed active sets (each seed row
         # draws its own cohort), broadcast across the scheme axis
@@ -120,7 +152,8 @@ class VmapPlacement(Placement):
             return per_cell(stacked, etas, params_b, fstate_b, keys_b,
                             cohort_b)
 
-        return jax.jit(cohort_chunk, static_argnames=("length",))
+        chunk = jax.jit(cohort_chunk, static_argnames=("length",))
+        return chunk if tracer is None else _traced_compiles(chunk, tracer)
 
     def compile_batch(self, fn):
         return jax.jit(jax.vmap(fn))
@@ -157,7 +190,8 @@ class ShardedPlacement(Placement):
         # carry the full [K, S] axes — adaptive or not
         return tile_over_seeds(stacked, s_axis)
 
-    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False):
+    def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
+                    tracer=None):
         compiled = {}
 
         if not cohort:
@@ -170,7 +204,9 @@ class ShardedPlacement(Placement):
                         round_body, length, k, s)
                 return fn(stacked, etas, params_b, fstate_b, keys_b, data)
 
-            return chunk
+            chunk._cache_size = lambda: len(compiled)
+            return chunk if tracer is None \
+                else _traced_compiles(chunk, tracer)
 
         def cohort_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
                          cohort_b, length):
@@ -182,7 +218,9 @@ class ShardedPlacement(Placement):
             return fn(stacked, etas, params_b, fstate_b, keys_b, data,
                       cohort_b)
 
-        return cohort_chunk
+        cohort_chunk._cache_size = lambda: len(compiled)
+        return cohort_chunk if tracer is None \
+            else _traced_compiles(cohort_chunk, tracer)
 
     def _compile(self, round_body, length: int, k: int, s: int):
         def cell(scheme, eta, params, fstate, key, data):

@@ -9,10 +9,12 @@
 ``core/sca.py`` (scipy SLSQP) remains the reference oracle.
 """
 from repro.solvers.sca_jax import (BatchResult, DEFAULT_CONFIG, SolverConfig,
-                                   solve, solve_batch, solve_batch_device)
+                                   set_trace_hook, solve, solve_batch,
+                                   solve_batch_device)
 from repro.solvers.theory_jax import SolverParams, from_ota, stack_params
 
 __all__ = [
     "BatchResult", "DEFAULT_CONFIG", "SolverConfig", "SolverParams",
-    "from_ota", "solve", "solve_batch", "solve_batch_device", "stack_params",
+    "from_ota", "set_trace_hook", "solve", "solve_batch",
+    "solve_batch_device", "stack_params",
 ]

@@ -41,7 +41,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence
+import time
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -404,6 +405,24 @@ def stack(prms: Sequence[OTAParams]) -> SolverParams:
     return tj.stack_params(prms)
 
 
+# Per-solve telemetry hook (DESIGN.md §Telemetry).  The driver installs
+# one around telemetry-enabled runs; unset (the default) the solve path
+# is untouched — no timing calls, no host syncs.
+_TRACE_HOOK: Optional[Callable] = None
+
+
+def set_trace_hook(hook: Optional[Callable]) -> Optional[Callable]:
+    """Install ``hook(record: dict)`` called once per device-resident
+    batched SCA solve with {batch, iters, objective_mean, converged, dur}.
+    Returns the previous hook so callers can restore it (try/finally).
+    The hook host-syncs the solve outputs to report the objective, so it
+    belongs in observability paths only."""
+    global _TRACE_HOOK
+    prev = _TRACE_HOOK
+    _TRACE_HOOK = hook
+    return prev
+
+
 def solve_batch_device(prm_b: SolverParams,
                        cfg: SolverConfig = DEFAULT_CONFIG) -> dict:
     """Device-resident batch solve: jnp in, jnp out (no host round-trip).
@@ -414,4 +433,15 @@ def solve_batch_device(prm_b: SolverParams,
     returned arrays are f64.
     """
     with enable_x64():
-        return _solve_batch_jit(_as_f64(prm_b), cfg)
+        hook = _TRACE_HOOK
+        t0 = time.monotonic() if hook is not None else 0.0
+        out = _solve_batch_jit(_as_f64(prm_b), cfg)
+        if hook is not None:
+            obj = np.asarray(out["objective"])
+            conv = np.asarray(out["converged"])
+            hook({"batch": int(obj.shape[0]) if obj.ndim else 1,
+                  "iters": int(cfg.max_iters),
+                  "objective_mean": float(np.mean(obj)),
+                  "converged": int(np.sum(conv)),
+                  "dur": round(time.monotonic() - t0, 6)})
+        return out

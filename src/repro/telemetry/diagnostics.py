@@ -1,0 +1,89 @@
+"""In-graph Theorem-1 diagnostics (DESIGN.md §Telemetry).
+
+The paper's convergence bound trades a *bias* term — the realized
+aggregation weights deviating from uniform 1/N — against a *variance*
+term: effective receiver noise plus participation randomness.  The
+runtime's loss/accuracy traces validate that trade-off only indirectly;
+this module computes the two sides per round, ON the realized design and
+the drawn channel, inside the compiled chunk.
+
+``make_metrics_hook`` returns a collector the engine's round body calls
+right after the OTA coefficients are fixed: the realized per-device
+weights ``s`` and the realized ``noise_scale`` — the exact quantities the
+aggregation consumed, so the diagnostics can never disagree with the
+update they describe.  The hook reuses ``solvers.theory_jax.bias_term``
+so the traced bias power is the same map the SCA objective optimizes,
+evaluated at the realized participation pattern instead of its
+expectation.
+
+Everything is a scalar f32 riding the existing ``hist.traces`` mechanism
+([K, S, T] per metric): no new outputs shapes, no host syncs, and — with
+the hook left at its default ``None`` — no change to the compiled program
+at all (the bitwise-off guarantee).
+"""
+from __future__ import annotations
+
+import types
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers import theory_jax
+
+# every diagnostic trace is namespaced so tools (and the report renderer)
+# can select them without a registry
+DIAG_PREFIX = "bv_"
+
+
+def make_metrics_hook(kappa_sq: float = 1.0) -> Callable:
+    """Build the per-round collector.
+
+    ``kappa_sq`` is the paper's gradient-dissimilarity bound (kappa^2 in
+    Theorem 1) so the traced bias power is in the objective's units; the
+    default 1.0 degrades gracefully to the pure geometric deviation when
+    the caller doesn't know the constant.
+
+    The hook signature matches the engine's call site:
+
+        hook(s=..., noise_scale=..., h=..., params=...) -> {name: scalar}
+
+    with ``s`` [N] the realized aggregation weights, ``noise_scale`` the
+    realized receiver-noise multiplier, ``h`` [N] the drawn channel, and
+    ``params`` the (pre-update) model pytree — used only for its static
+    leaf sizes, to convert per-coordinate noise into the d-dimensional
+    effective variance of Theorem 1.
+    """
+    # bias_term only reads kappa_sq off its parameter container, so a
+    # one-field namespace stands in for a full SolverParams
+    kprm = types.SimpleNamespace(kappa_sq=jnp.float32(float(kappa_sq)))
+
+    def hook(s, noise_scale, h, params):
+        n = s.shape[-1]
+        d = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
+        tot = jnp.sum(s)
+        # realized participation weights; an all-truncated round (s == 0)
+        # realizes the uniform point, i.e. zero bias by convention
+        pm = jnp.where(tot > 0, s / jnp.where(tot == 0, 1.0, tot), 1.0 / n)
+        return {
+            # Theorem-1 bias power at the REALIZED participation pattern
+            DIAG_PREFIX + "bias_power": jnp.asarray(
+                theory_jax.bias_term(pm, kprm), jnp.float32),
+            # raw deviation of the realized weights from uniform (captures
+            # scaling bias that the normalized pm hides)
+            DIAG_PREFIX + "weight_dev": jnp.asarray(
+                jnp.sum(jnp.square(s - 1.0 / n)), jnp.float32),
+            # effective noise variance of the update: E||noise||^2 over
+            # the d model coordinates at the realized noise multiplier
+            DIAG_PREFIX + "noise_var": jnp.asarray(
+                d * jnp.square(noise_scale), jnp.float32),
+            # realized channel power entering the round (mean over devices)
+            DIAG_PREFIX + "chan_power": jnp.asarray(
+                jnp.mean(jnp.square(jnp.abs(h))), jnp.float32),
+        }
+
+    return hook
+
+
+def is_diagnostic(trace_name: str) -> bool:
+    return trace_name.startswith(DIAG_PREFIX)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import distributed
+from repro import distributed, telemetry
 from repro.core import channel, power_control as pcm, scenarios as scn
 from repro.data import partition, synthetic
 from repro.fl import driver, engine as eng
@@ -414,6 +414,68 @@ def test_solve_batch_sharded_matches_vmap():
     np.testing.assert_allclose(got.gamma, ref.gamma, rtol=1e-7)
     np.testing.assert_allclose(got.objective, ref.objective, rtol=1e-7)
     np.testing.assert_allclose(got.alpha, ref.alpha, rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# recompilation audit: telemetry.assert_no_recompile over placement chunks
+# ---------------------------------------------------------------------------
+
+def _fleet_chunk_operands(world):
+    dep, prm, data, params0, _ = world
+    stacked = pcm.stack_schemes([pcm.make_power_control("sca", dep, prm)])
+    run = FLRunConfig(eta=0.05, num_rounds=4, eval_every=2)
+    body = eng.make_round_body(mlp.mlp_loss, dep.gains, run, flat=False)
+    data = tuple(jnp.asarray(a) for a in data)
+    params_b = jax.tree.map(
+        lambda a: jnp.tile(jnp.asarray(a)[None, None],
+                           (1, 1) + (1,) * jnp.ndim(a)), params0)
+    keys_b = jnp.tile(jax.random.PRNGKey(0)[None, None], (1, 1, 1))
+    etas = np.array([run.eta])
+    return body, (stacked, etas, params_b, None, keys_b, data)
+
+
+def test_assert_no_recompile_vmap_chunk(world):
+    """Both chunk lengths warmed: repeated calls inside the audit scope
+    stay on the two compiled programs; an unwarmed length inside the
+    scope trips the assertion (the failure mode the audit exists for)."""
+    body, ops = _fleet_chunk_operands(world)
+    chunk = VmapPlacement().build_chunk(body, adaptive=False)
+    chunk(*ops, length=2)
+    chunk(*ops, length=1)                                  # warm both
+    with telemetry.assert_no_recompile(chunk):
+        chunk(*ops, length=2)
+        chunk(*ops, length=1)
+    assert chunk._cache_size() == 2
+    with pytest.raises(AssertionError, match="compile cache grew"):
+        with telemetry.assert_no_recompile(chunk):
+            chunk(*ops, length=3)
+    # allowed= raises the budget for stages that legitimately compile
+    with telemetry.assert_no_recompile(chunk, allowed=1):
+        chunk(*ops, length=4)
+
+
+@needs_mesh
+def test_assert_no_recompile_sharded_chunk(world):
+    """The sharded chunk's explicit (length, k, s) program dict honours
+    the same ``_cache_size`` audit contract as the jit path."""
+    body, ops = _fleet_chunk_operands(world)
+    placement = ShardedPlacement(make_debug_mesh(2, 2))
+    stacked = placement.prepare_schemes(ops[0], 1, adaptive=False)
+    ops = (stacked,) + ops[1:]
+    chunk = placement.build_chunk(body, adaptive=False)
+    chunk(*ops, length=2)
+    with telemetry.assert_no_recompile(chunk):
+        chunk(*ops, length=2)
+    assert chunk._cache_size() == 1
+    with pytest.raises(AssertionError, match="compile cache grew"):
+        with telemetry.assert_no_recompile(chunk):
+            chunk(*ops, length=1)
+
+
+def test_assert_no_recompile_rejects_uninstrumented():
+    with pytest.raises(ValueError, match="compile cache"):
+        with telemetry.assert_no_recompile(lambda: None):
+            pass
 
 
 def test_solve_batch_vmap_placement_matches_default():

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import tasks
+from repro import tasks, telemetry
 from repro.core import channel, power_control as pcm, scenarios as scn
 from repro.data import partition, synthetic
 from repro.fl import driver, engine as eng
@@ -215,14 +215,21 @@ def test_cohort_chunks_do_not_recompile():
                            (1, 1) + (1,) * jnp.ndim(a)), params0)
     keys_b = jnp.tile(jax.random.PRNGKey(0)[None, None], (1, 1, 1))
     etas = np.array([run.eta])
-    outs = []
-    for tick in range(5):
+
+    def step(tick):
         idx = pop.draw_cohort(6, tick)[None]              # [S=1, N]
         cohort = {"gains": jnp.asarray(pop.gains_of(idx[0])[None]),
                   "data_idx": jnp.asarray((idx % 6).astype(np.int32))}
-        params_b, _, keys_b, m = chunk(stacked, etas, params_b, None,
-                                       keys_b, data, cohort, length=2)
-        outs.append(np.asarray(m["active_devices"]))
+        return chunk(stacked, etas, params_b, None, keys_b, data, cohort,
+                     length=2)
+
+    outs = []
+    params_b, _, keys_b, m = step(0)                      # warm-up compile
+    outs.append(np.asarray(m["active_devices"]))
+    with telemetry.assert_no_recompile(chunk):
+        for tick in range(1, 5):
+            params_b, _, keys_b, m = step(tick)
+            outs.append(np.asarray(m["active_devices"]))
     assert chunk._cache_size() == 1, \
         f"cohort swap recompiled: {chunk._cache_size()} cache entries"
     assert len(outs) == 5
