@@ -29,7 +29,11 @@ at growing K*S — and refreshes the repo-root ``BENCH_engine.json`` summary
 (headline walls + speedups, machine-readable across PRs; shape pinned by
 ``benchmarks/bench_schema.json`` via ``benchmarks.validate_bench``).
 ``--bench`` also runs :func:`population_benchmark` — sustained rounds/sec
-of the 1M-population / 50-cohort streaming loop, stream vs serial.
+of the 1M-population / 50-cohort streaming loop, stream vs serial — and
+:func:`kernel_benchmark`, the fused-vs-unfused ``ota_round_step`` walls
+per uplink dtype (f32/bf16/int8) with the f32 bitwise pin;
+``--bench-kernel`` runs ONLY that section (seconds, not the multi-minute
+legacy sweep).
 
 Claims validated (paper §IV):
   * Ideal FedAvg best everywhere.
@@ -531,6 +535,86 @@ def population_benchmark(task="paper_mlp", size: int = 1_000_000,
     return report
 
 
+def kernel_benchmark(task="paper_mlp", num_rounds: int = 12,
+                     eval_every: int = 6, seed: int = 0,
+                     batch_size: int = BENCH_BATCH,
+                     log: bool = True) -> dict:
+    """Fused-vs-unfused round-step walls per uplink dtype (DESIGN.md
+    §Kernels) — the measured side of the ``ota_round_step`` fusion.
+
+    Two layers, both recorded under "round_step" in the task's
+    engine_benchmark.json and surfaced into BENCH_engine.json:
+
+    kernel  micro walls of the round tail alone at the paper's model
+            scale (``kernel_bench.round_step_rows``): one fused launch vs
+            the historical aggregate/ghat/step chain, plus uplink bytes
+            per wire dtype — what the fusion and a low-precision uplink
+            each save.
+    fleet   the same comparison end-to-end through ``run_fleet_task`` on
+            the 7-scheme grid: exec walls with ``fuse_round`` on/off at
+            each ``uplink_dtype``, with the two trajectories checked
+            bitwise-equal (f32's check is the acceptance pin — fusion
+            must not move a single bit of the committed numbers).
+
+    Also runs the interpret-mode Pallas-vs-oracle equivalence gate so the
+    committed JSON records kernel agreement, not just jnp-path walls.
+    """
+    from benchmarks import kernel_bench
+
+    task = _task(task)
+    if log:
+        print("round-step micro walls (paper scale, per uplink dtype):")
+    micro = kernel_bench.round_step_rows()
+    if log:
+        for r in micro:
+            print(f"  {r['uplink_dtype']}: fused {r['fused_us']}us vs "
+                  f"unfused {r['unfused_us']}us ({r['speedup']}x), "
+                  f"uplink {r['uplink_mb']}MB")
+    interp_err = kernel_bench.round_step_equivalence()
+
+    dep, prm, td = build_world(task, seed)
+    params0 = task.init_params(seed)
+    evals = task.make_eval(td)
+    pcs = make_schemes(task, dep, prm)
+    run_cfg = task.run_config(num_rounds=num_rounds, eval_every=eval_every,
+                              seed=seed, batch_size=batch_size)
+    kw = dict(task_data=td, params=params0, eval_fn=evals, seeds=(0,),
+              flat=True)
+    fleet = {}
+    for ud in kernel_bench.UPLINKS:
+        res_f = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw,
+                               uplink_dtype=ud, fuse_round=True)
+        res_u = run_fleet_task(task, pcs, dep.gains, run_cfg, **kw,
+                               uplink_dtype=ud, fuse_round=False)
+        bitwise = all(
+            bool(np.array_equal(np.asarray(a), np.asarray(b)))
+            for a, b in zip(jax.tree.leaves(res_f.params),
+                            jax.tree.leaves(res_u.params))) \
+            and all(np.array_equal(res_f.traces[k], res_u.traces[k])
+                    for k in res_f.traces)
+        fleet[ud] = {"fused_exec_s": round(res_f.wall_exec, 2),
+                     "unfused_exec_s": round(res_u.wall_exec, 2),
+                     "bitwise_fused_vs_unfused": bool(bitwise)}
+        if log:
+            print(f"fleet grid ({ud}): fused exec "
+                  f"{fleet[ud]['fused_exec_s']}s vs unfused "
+                  f"{fleet[ud]['unfused_exec_s']}s, bitwise={bitwise}")
+
+    report = {
+        "config": {"task": task.name, "schemes": SCHEMES,
+                   "num_rounds": num_rounds, "eval_every": eval_every,
+                   "seed": seed, "batch_size": batch_size,
+                   "backend": jax.default_backend()},
+        "kernel": micro,
+        "interpret_max_err": interp_err,
+        "fleet": fleet,
+        "f32_bitwise": fleet["f32"]["bitwise_fused_vs_unfused"],
+    }
+    _merge_benchmark_json(task, {"round_step": report})
+    write_bench_summary(task)
+    return report
+
+
 def _benchmark_json_path(task) -> str:
     return os.path.join(artifact_dir(task), "engine_benchmark.json")
 
@@ -590,6 +674,8 @@ def write_bench_summary(task="paper_mlp") -> dict:
         }
     if "population" in report:
         summary["population"] = report["population"]
+    if "round_step" in report:
+        summary["round_step"] = report["round_step"]
     with open(BENCH_SUMMARY, "w") as f:
         json.dump(summary, f, indent=1)
     from benchmarks.validate_bench import validate
@@ -625,6 +711,10 @@ def main(argv=None) -> None:
     ap.add_argument("--bench-placement", action="store_true",
                     help="vmap-vs-sharded wall comparison at growing K*S; "
                          "refreshes repo-root BENCH_engine.json")
+    ap.add_argument("--bench-kernel", action="store_true",
+                    help="fused-vs-unfused round-step walls per uplink "
+                         "dtype only (skips the multi-minute legacy "
+                         "sweep); refreshes BENCH_engine.json")
     ap.add_argument("--legacy", action="store_true",
                     help="run the pre-engine host loop instead of the fleet")
     ap.add_argument("--sharded", action="store_true",
@@ -669,19 +759,28 @@ def main(argv=None) -> None:
         task = _task(args.task)
     except (KeyError, ValueError) as e:
         raise SystemExit(str(e))
-    if args.sharded and (args.legacy or args.bench):
+    if args.sharded and (args.legacy or args.bench or args.bench_kernel):
         raise SystemExit("--sharded applies to the fleet engine only; "
-                         "drop --legacy/--bench")
+                         "drop --legacy/--bench/--bench-kernel")
     if (args.checkpoint or args.resume) \
-            and (args.legacy or args.bench or args.bench_placement):
+            and (args.legacy or args.bench or args.bench_placement
+                 or args.bench_kernel):
         raise SystemExit("--checkpoint/--resume apply to the fleet engine "
-                         "only; drop --legacy/--bench/--bench-placement")
+                         "only; drop --legacy/--bench/--bench-placement/"
+                         "--bench-kernel")
     if args.population and (args.legacy or args.sharded):
         raise SystemExit("--population applies to the vmap fleet engine; "
                          "drop --legacy/--sharded")
-    if args.telemetry and (args.legacy or args.bench or args.bench_placement):
+    if args.telemetry and (args.legacy or args.bench or args.bench_placement
+                           or args.bench_kernel):
         raise SystemExit("--telemetry applies to the fleet engine only; "
-                         "drop --legacy/--bench/--bench-placement")
+                         "drop --legacy/--bench/--bench-placement/"
+                         "--bench-kernel")
+    if args.bench_kernel and not args.bench:
+        kernel_benchmark(task=task, num_rounds=min(args.rounds, 12),
+                         eval_every=args.every or 6, seed=args.seed,
+                         batch_size=args.batch_size or BENCH_BATCH)
+        return
     if args.bench:
         benchmark(num_rounds=args.rounds, eval_every=args.every or 15,
                   seed=args.seed, task=task,
@@ -693,6 +792,9 @@ def main(argv=None) -> None:
                              size=args.population or 1_000_000,
                              cohort=args.cohort or 50, seed=args.seed,
                              batch_size=args.batch_size or BENCH_BATCH)
+        kernel_benchmark(task=task, num_rounds=12,
+                         eval_every=args.every or 6, seed=args.seed,
+                         batch_size=args.batch_size or BENCH_BATCH)
         return
     if args.bench_placement:
         placement_benchmark(task=task, num_rounds=min(args.rounds, 30),

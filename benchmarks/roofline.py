@@ -123,6 +123,48 @@ def roofline_row(record: dict) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Fused OTA round-step kernel (DESIGN.md §Kernels): analytic roofline of one
+# ota_round_step launch per uplink dtype, vs the unfused four-op chain.
+# ---------------------------------------------------------------------------
+
+_UPLINK_WIRE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def ota_round_step_roofline(n: int = 10, d: int = 814_090) -> list:
+    """Compute/memory terms of the fused round-step kernel at [N, D].
+
+    Traffic of one fused launch: the [N, D] uplink at wire precision in,
+    z + params in and params out at f32 — the unfused chain adds a ghat
+    f32 write + read between the aggregate and step launches.  FLOPs:
+    dequantize + precode-weight + accumulate over N (~3ND) plus the
+    noise-add and SGD step (~4D).  At the paper's scale the arithmetic
+    intensity is ~0.7–1.5 FLOPs/byte — far below the compute/memory
+    ridge — so the kernel is memory-bound for every wire dtype and the
+    fusion's saved ghat round-trip — and a narrower uplink — convert
+    directly into wall time.
+    """
+    rows = []
+    for ud, wire in _UPLINK_WIRE_BYTES.items():
+        fused_bytes = n * d * wire + 3 * d * 4
+        unfused_bytes = fused_bytes + 2 * d * 4
+        flops = 3.0 * n * d + 4.0 * d
+        t_compute = flops / PEAK_FLOPS_BF16
+        t_memory = fused_bytes / HBM_BW
+        rows.append({
+            "kernel": "ota_round_step", "uplink_dtype": ud,
+            "n": n, "d": d,
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "unfused_memory_s": unfused_bytes / HBM_BW,
+            "dominant": "compute" if t_compute > t_memory else "memory",
+            "flops_per_byte": flops / fused_bytes,
+            "fused_bytes_mb": fused_bytes / 1e6,
+            "unfused_bytes_mb": unfused_bytes / 1e6,
+        })
+    return rows
+
+
 def load_records(pattern: str = "*_pod.json") -> list:
     rows = []
     for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
@@ -137,4 +179,6 @@ def run() -> list:
 
 if __name__ == "__main__":
     for row in run():
+        print(row)
+    for row in ota_round_step_roofline():
         print(row)

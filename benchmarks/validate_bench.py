@@ -13,11 +13,15 @@ built-in checker covering the subset the schema actually uses (type,
 required, properties, additionalProperties, items, minimum /
 exclusiveMinimum, minItems) — no new dependencies either way.
 
-Beyond the shape, one semantic invariant is checked: the per-chunk
+Beyond the shape, two semantic invariants are checked: the per-chunk
 staging breakdown ``population.stage_chunks_s`` (when present) must sum
 back to the ``population.wall_s.{stream,serial}_stage`` aggregates it
 refines — a breakdown that doesn't reconcile with its own total is a
-recording bug, not a perf change.
+recording bug, not a perf change — and the ``round_step`` section (when
+present) must carry fused-vs-unfused walls for EVERY uplink dtype
+(f32/bf16/int8) in both its kernel rows and its fleet grid: a partial
+dtype sweep would silently read as "quantized uplink measured" when it
+wasn't.
 """
 from __future__ import annotations
 
@@ -98,6 +102,30 @@ def _check_stage_chunks(summary: dict, errors: list) -> None:
                 f"{total}s")
 
 
+_UPLINK_DTYPES = ("f32", "bf16", "int8")
+
+
+def _check_round_step(summary: dict, errors: list) -> None:
+    """round_step (when present) must cover every uplink dtype in both
+    the kernel micro rows and the end-to-end fleet walls."""
+    rs = summary.get("round_step")
+    if not isinstance(rs, dict):
+        return
+    rows = rs.get("kernel")
+    if isinstance(rows, list):
+        seen = {r.get("uplink_dtype") for r in rows if isinstance(r, dict)}
+        missing = set(_UPLINK_DTYPES) - seen
+        if missing:
+            errors.append(f"round_step/kernel: missing uplink dtypes "
+                          f"{sorted(missing)}")
+    fleet = rs.get("fleet")
+    if isinstance(fleet, dict):
+        missing = set(_UPLINK_DTYPES) - set(fleet)
+        if missing:
+            errors.append(f"round_step/fleet: missing uplink dtypes "
+                          f"{sorted(missing)}")
+
+
 def validate(summary_path: str = DEFAULT_SUMMARY,
              schema_path: str = SCHEMA) -> list:
     """Return a list of violation strings (empty = valid)."""
@@ -111,11 +139,13 @@ def validate(summary_path: str = DEFAULT_SUMMARY,
         errors: list = []
         _check(summary, schema, "", errors)
         _check_stage_chunks(summary, errors)
+        _check_round_step(summary, errors)
         return errors
     validator = jsonschema.Draft7Validator(schema)
     errors = [f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
               f"{e.message}" for e in validator.iter_errors(summary)]
     _check_stage_chunks(summary, errors)
+    _check_round_step(summary, errors)
     return errors
 
 

@@ -74,10 +74,32 @@ def restore(path: str, like: PyTree) -> PyTree:
     return restore_flat(load_flat(path), like)
 
 
+def _normalize(arr: np.ndarray, leaf):
+    """Return ``arr`` in the exact operand form of the template ``leaf``:
+    same dtype AND same container class (np.ndarray vs jax.Array).
+
+    The container class matters for compile caches: jit keys committed
+    ``jax.Array`` and host ``np.ndarray`` operands differently even at
+    identical avals, so a carry restored as raw npz arrays makes the first
+    resumed chunk call compile a second program for a computation that is
+    already cached for the live-carry form — the resumed-``adaptive_sca``
+    retrace the recompilation audit used to flag.  Values are never
+    touched: the dtype cast is a no-op for every round-trip the fleet
+    writes (npz preserves dtypes), and re-wrapping bits in a jax.Array is
+    exact, so the bitwise-resume contract is unaffected."""
+    arr = np.asarray(arr, dtype=np.asarray(leaf).dtype)
+    if isinstance(leaf, jax.Array):
+        return jax.numpy.asarray(arr)
+    return arr
+
+
 def restore_flat(flat: dict, like: PyTree) -> PyTree:
     """``restore`` from an already-loaded ``load_flat`` dict — callers that
     need both the structured carry and the variable-length extras (the
-    fleet driver) read the archive once and reuse it."""
+    fleet driver) read the archive once and reuse it.  Restored leaves are
+    normalized to the template's dtype and container class (see
+    ``_normalize``) so a resumed run's operands are indistinguishable —
+    compile-cache-wise — from an uninterrupted run's."""
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pth, leaf in flat_like:
@@ -89,7 +111,7 @@ def restore_flat(flat: dict, like: PyTree) -> PyTree:
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
-        leaves.append(arr)
+        leaves.append(_normalize(arr, leaf))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

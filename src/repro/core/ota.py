@@ -25,6 +25,11 @@ import jax.numpy as jnp
 
 PyTree = Any
 
+# wire dtypes a device may transmit on the uplink (kernels.ops owns the
+# quantization contract; re-exported here because core/ota is the layer
+# callers configure)
+UPLINK_DTYPES = ("f32", "bf16", "int8")
+
 
 def draw_fading(key: jax.Array, gains: jax.Array) -> jax.Array:
     """h_m ~ CN(0, Lambda_m): complex [N]."""
@@ -97,7 +102,8 @@ def split_ota_key(key: jax.Array):
 
 
 def apply_round_coeffs(stacked_grads: PyTree, s: jax.Array, noise_scale,
-                       k_noise: jax.Array, flat: bool = False) -> PyTree:
+                       k_noise: jax.Array, flat: bool = False,
+                       uplink_dtype: str = "f32") -> PyTree:
     """Aggregate with precomputed per-round coefficients.
 
     flat=False: the per-leaf tree-map path (reference oracle).
@@ -108,13 +114,34 @@ def apply_round_coeffs(stacked_grads: PyTree, s: jax.Array, noise_scale,
                 keying reproduces the tree path's realizations.  ~1e-7
                 relative fp difference from the oracle (fusion/FMA
                 ordering), tested in tests/test_engine.py.
+
+    ``uplink_dtype`` (flat only): devices transmit f32/bf16/int8 symbols
+    (kernels.ops.quantize_uplink); the receiver dequantizes and
+    f32-accumulates.  "f32" is bitwise today's path.
     """
     if flat:
         from repro.kernels import ops as kops
         return kops.ota_aggregate_pytree(stacked_grads, s, noise_scale,
-                                         k_noise)
+                                         k_noise, uplink_dtype=uplink_dtype)
+    if uplink_dtype != "f32":
+        raise ValueError("quantized uplink requires the flat aggregation "
+                         f"path (flat=True), got uplink_dtype={uplink_dtype!r}")
     agg = weighted_sum(stacked_grads, s)
     return add_receiver_noise(agg, noise_scale, k_noise)
+
+
+def fused_round_step(stacked_grads: PyTree, s: jax.Array, noise_scale,
+                     k_noise: jax.Array, params: PyTree, eta,
+                     uplink_dtype: str = "f32") -> PyTree:
+    """The whole flat-path round tail — quantized uplink, superposition,
+    receiver noise, SGD step — as one fused launch; returns updated params
+    (kernels.ops.ota_round_step_pytree: Pallas kernel on TPU, flattened
+    jnp oracle on CPU).  With ``uplink_dtype="f32"`` this is bitwise the
+    two-step ``apply_round_coeffs(flat=True)`` + tree-map SGD update."""
+    from repro.kernels import ops as kops
+    return kops.ota_round_step_pytree(stacked_grads, s, noise_scale,
+                                      k_noise, params, eta,
+                                      uplink_dtype=uplink_dtype)
 
 
 def ota_aggregate(stacked_grads: PyTree, scheme, h: jax.Array,

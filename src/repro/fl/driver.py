@@ -94,7 +94,7 @@ def _fading_desc(fading) -> str:
 
 def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
                     fading, population=None, cohort_size=None,
-                    cohort_rounds=None) -> dict:
+                    cohort_rounds=None, uplink_dtype="f32") -> dict:
     """Everything that must match for a resumed run to be bit-identical
     to the uninterrupted one: the grid, the full run config (dynamics:
     eta/batch_size/gmax/clipping), the per-scheme etas, the aggregation
@@ -103,8 +103,12 @@ def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
     process descriptor and the population/cohort schedule — so a resume
     against a different world is rejected, not silently mixed.  The
     ``stream`` flag is deliberately absent: overlap changes walls, never
-    math, so resuming across stream modes is legal."""
-    return {"names": list(names), "seeds": list(seeds),
+    math, so resuming across stream modes is legal — as is ``fuse_round``
+    (fused and unfused round tails agree bitwise for f32 and share the
+    wire values for quantized uplinks).  ``uplink_dtype`` IS identity:
+    quantization changes every trajectory."""
+    return {"uplink_dtype": str(uplink_dtype),
+            "names": list(names), "seeds": list(seeds),
             "num_rounds": run.num_rounds, "eval_every": run.eval_every,
             "eta": run.eta, "batch_size": run.batch_size, "gmax": run.gmax,
             "clip_to_gmax": bool(run.clip_to_gmax), "seed": run.seed,
@@ -198,7 +202,9 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
               max_chunks: Optional[int] = None, population=None,
               cohort_size: Optional[int] = None,
               cohort_rounds: Optional[int] = None,
-              stream: bool = True, telemetry=None) -> FLResult:
+              stream: bool = True, telemetry=None,
+              uplink_dtype: Optional[str] = None,
+              fuse_round: Optional[bool] = None) -> FLResult:
     """A [K-scheme x S-seed] experiment grid through a hardware placement.
 
     The grid/scheme/seed/eta semantics are ``engine.run_fleet``'s (which
@@ -244,6 +250,20 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                      ``traces`` (DESIGN.md §Telemetry).  ``None``
                      (default) compiles and runs the exact pre-telemetry
                      program — bitwise, not just numerically.
+    uplink_dtype     wire precision devices transmit — "f32" | "bf16" |
+                     "int8" (per-device symmetric scale; DESIGN.md
+                     §Kernels).  ``None`` (default) takes
+                     ``run.uplink_dtype``.  Non-f32 requires ``flat``.
+                     Part of the checkpoint identity: it changes the
+                     numbers, so resuming across uplink dtypes is
+                     rejected.
+    fuse_round       force the flat round tail fused (one
+                     ``ota_round_step`` launch) or unfused (the
+                     historical aggregate-then-update chain); ``None`` =
+                     fused exactly when ``flat``.  NOT part of the
+                     checkpoint identity — with an f32 uplink the two are
+                     bitwise-identical, and quantized uplinks share the
+                     same wire values either way.
 
     Adaptive schemes (``power_control.AdaptiveSCA``) re-design BETWEEN
     chunks from the live fading state, whatever the placement: the state
@@ -268,6 +288,10 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     etas = np.asarray(etas, np.float64)
     if etas.shape != (k,):
         raise ValueError(f"etas shape {etas.shape} != ({k},)")
+    # resolve here (not just in make_round_body): the checkpoint identity
+    # must record the wire precision actually used
+    if uplink_dtype is None:
+        uplink_dtype = getattr(run, "uplink_dtype", "f32") or "f32"
 
     redesign = getattr(stacked, "redesign_fn", None)
     pop_mode = population is not None
@@ -312,7 +336,9 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
 
     round_body = make_round_body(loss_fn, gains, run, fading=fading,
                                  flat=flat, cohort=pop_mode,
-                                 metrics_hook=metrics_hook)
+                                 metrics_hook=metrics_hook,
+                                 uplink_dtype=uplink_dtype,
+                                 fuse_round=fuse_round)
     chunk = placement.build_chunk(round_body, adaptive or pop_adaptive,
                                   cohort=pop_mode, tracer=tracer)
 
@@ -403,7 +429,7 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     if checkpoint_path is not None:
         identity = _fleet_identity(names, seeds, run, etas, flat, placement,
                                    gains, data, fading, population,
-                                   n_cohort, cohort_cadence)
+                                   n_cohort, cohort_cadence, uplink_dtype)
     start_chunk = 0
     if resuming:
         (start_chunk, t, stacked, params_b, fading_state, keys_b,

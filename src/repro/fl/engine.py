@@ -110,7 +110,9 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
                     fading=None, flat: bool = False,
                     sample_on_device: bool = True,
                     cohort: bool = False,
-                    metrics_hook: Optional[Callable] = None) -> Callable:
+                    metrics_hook: Optional[Callable] = None,
+                    uplink_dtype: Optional[str] = None,
+                    fuse_round: Optional[bool] = None) -> Callable:
     """One FL round as a pure function.
 
         body(scheme, eta, params, fading_state, key, data)
@@ -143,8 +145,34 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
     returns extra scalar traces (the in-graph bias-variance diagnostics).
     The default ``None`` leaves the round body — and therefore the
     compiled chunk — literally unchanged: the bitwise-off guarantee.
+
+    ``uplink_dtype`` (default: ``run.uplink_dtype``, itself "f32") picks
+    the wire precision devices transmit — f32, bf16 or int8 with a
+    per-device symmetric scale (kernels.ops.quantize_uplink); the receiver
+    always dequantizes and accumulates in f32.  Quantized uplinks require
+    the flat path (there is no wire on the tree-map oracle).
+
+    ``fuse_round`` controls whether the flat round tail runs as the ONE
+    fused ``ota.fused_round_step`` launch (aggregate + noise + SGD step,
+    kernels/round_step.py) or as the historical aggregate-then-update op
+    chain.  Default ``None`` = fuse exactly when ``flat`` — with an f32
+    uplink the fused launch is bitwise the unfused chain (pinned in
+    tests/test_kernels.py), so flipping the default changes no numbers.
+    ``fuse_round=False`` keeps the unfused reference for parity tests and
+    the fused-vs-unfused benchmark.
     """
     gains_j = None if gains is None else jnp.asarray(gains)
+    if uplink_dtype is None:
+        uplink_dtype = getattr(run, "uplink_dtype", "f32") or "f32"
+    if uplink_dtype not in ota.UPLINK_DTYPES:
+        raise ValueError(f"uplink_dtype must be one of {ota.UPLINK_DTYPES}, "
+                         f"got {uplink_dtype!r}")
+    if uplink_dtype != "f32" and not flat:
+        raise ValueError(f"uplink_dtype={uplink_dtype!r} requires the flat "
+                         "aggregation path (flat=True)")
+    fuse = bool(flat) if fuse_round is None else bool(fuse_round)
+    if fuse and not flat:
+        raise ValueError("fuse_round=True requires flat=True")
 
     def device_grad(params, batch):
         g = jax.grad(loss_fn)(params, batch)
@@ -174,12 +202,18 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
         # round_coeffs, so recomputing from a different key split would).
         k_coeff, k_noise = ota.split_ota_key(k_ota)
         s, noise_scale = scheme.round_coeffs(h, k_coeff)
-        g_hat = ota.apply_round_coeffs(grads, s, noise_scale, k_noise,
-                                       flat=flat)
-        params = jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32)
-                          - eta * g.astype(jnp.float32)).astype(p.dtype),
-            params, g_hat)
+        if fuse:
+            params = ota.fused_round_step(grads, s, noise_scale, k_noise,
+                                          params, eta,
+                                          uplink_dtype=uplink_dtype)
+        else:
+            g_hat = ota.apply_round_coeffs(grads, s, noise_scale, k_noise,
+                                           flat=flat,
+                                           uplink_dtype=uplink_dtype)
+            params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - eta * g.astype(jnp.float32)).astype(p.dtype),
+                params, g_hat)
         metrics = {
             "grad_norm_mean": jnp.mean(norms),
             "active_devices": jnp.sum((s > 0).astype(jnp.float32)),

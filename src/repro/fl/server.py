@@ -49,6 +49,11 @@ class FLRunConfig:
     eval_every: int = 10
     seed: int = 0
     clip_to_gmax: bool = True
+    uplink_dtype: str = "f32"      # wire precision devices transmit on the
+    #                                uplink: f32 | bf16 | int8 (per-device
+    #                                symmetric scale); non-f32 requires the
+    #                                flat aggregation path.  See
+    #                                kernels.ops.quantize_uplink.
 
 
 class History(list):

@@ -16,7 +16,14 @@ import numpy as np
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import ota_aggregate as oa
+from repro.kernels import round_step as rs
 from repro.kernels import ssd_scan as ss
+
+UPLINK_DTYPES = ("f32", "bf16", "int8")
+
+# int8 symmetric quantization: values map to [-127, 127] (the -128 code is
+# unused so the grid is symmetric around zero — standard for weights/grads)
+INT8_LEVELS = 127.0
 
 
 def _on_cpu() -> bool:
@@ -31,6 +38,45 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths), size
+
+
+def quantize_uplink(g: jax.Array, uplink_dtype: str):
+    """Device-side uplink quantization of the [N, D] precoded gradients.
+
+    Returns ``(wire, q_scale)`` — the array as transmitted plus the
+    per-device symmetric dequantization scale (None when the wire dtype
+    dequantizes by cast alone):
+
+      f32   passthrough — ``wire is g`` exactly, so the f32 uplink cannot
+            move a bit anywhere downstream.
+      bf16  round-to-nearest-even cast; dequant is the f32 upcast.
+      int8  per-device symmetric scale over the device's full raveled
+            gradient: scale_m = max_d |g[m, d]| / 127, wire = round(g /
+            scale) clipped to [-127, 127].  Quantization error per element
+            is bounded by scale_m / 2.
+
+    The scale rides the round operands next to ``s`` — it is data the
+    receiver needs per round, not a compile-time constant.
+    """
+    if uplink_dtype == "f32":
+        return g, None
+    if uplink_dtype == "bf16":
+        return g.astype(jnp.bfloat16), None
+    if uplink_dtype == "int8":
+        amax = jnp.max(jnp.abs(g.astype(jnp.float32)), axis=1)
+        scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / INT8_LEVELS
+        q = jnp.round(g.astype(jnp.float32) / scale[:, None])
+        return jnp.clip(q, -INT8_LEVELS, INT8_LEVELS).astype(jnp.int8), scale
+    raise ValueError(f"uplink_dtype must be one of {UPLINK_DTYPES}, "
+                     f"got {uplink_dtype!r}")
+
+
+def dequantize_uplink(wire: jax.Array, q_scale) -> jax.Array:
+    """Receiver-side inverse of ``quantize_uplink`` (always f32 out)."""
+    gf = wire.astype(jnp.float32)
+    if q_scale is None:
+        return gf
+    return gf * q_scale[:, None].astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -50,8 +96,96 @@ def ota_aggregate(g: jax.Array, s: jax.Array, z: jax.Array,
     return out[:d0]
 
 
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ota_round_step(g: jax.Array, s: jax.Array, z: jax.Array,
+                   noise_scale: jax.Array, params: jax.Array,
+                   eta: jax.Array, q_scale=None, *,
+                   block_d: int = 64 * 1024,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Fused OTA round step over [N, D] wire-dtype gradients + [D] params
+    (see round_step.py): dequantize, weighted-superpose, noise-inject and
+    SGD-update in one Pallas launch."""
+    interpret = _on_cpu() if interpret is None else interpret
+    gp, d0 = _pad_to(g, 1, 8 * 128)
+    zp, _ = _pad_to(z, 0, 8 * 128)
+    pp, _ = _pad_to(params, 0, 8 * 128)
+    blk = min(block_d, gp.shape[1])
+    while gp.shape[1] % blk:
+        blk //= 2
+    qs = jnp.ones_like(s, jnp.float32) if q_scale is None \
+        else q_scale.astype(jnp.float32)
+    out = rs.ota_round_step_pallas(gp, qs, s, zp,
+                                   jnp.asarray(noise_scale, jnp.float32),
+                                   pp, jnp.asarray(eta, jnp.float32),
+                                   block_d=blk, interpret=interpret)
+    return out[:d0]
+
+
+def ota_round_step_pytree(stacked, s: jax.Array, noise_scale,
+                          key: jax.Array, params, eta, *,
+                          uplink_dtype: str = "f32",
+                          block_d: int = 64 * 1024,
+                          use_kernel: Optional[bool] = None,
+                          interpret: Optional[bool] = None):
+    """The whole flat-path round body — quantized uplink, OTA aggregation,
+    receiver noise, SGD step — as ONE fused launch over the raveled model.
+
+    ``stacked`` is the gradient pytree with leading client axis [N, ...];
+    ``params`` is the matching parameter pytree (no client axis).  Both are
+    raveled to single [N, D] / [D] arrays, devices quantize the precoded
+    gradient per ``uplink_dtype`` (``quantize_uplink``), and one kernel
+    launch dequantizes, f32-accumulates sum_m s_m g_m + noise_scale * z and
+    applies ``p - eta * ghat`` — four XLA ops and two extra HBM round-trips
+    collapsed into one pass.  Returns the updated parameter pytree, cast
+    back to each leaf's dtype.
+
+    Noise keying is byte-identical to ``ota_aggregate_pytree``: split(key,
+    n_leaves), leaf l draws normal(keys[l], leaf_size), concatenated — so
+    an f32 uplink consumes the same randomness and computes the same
+    expression as the unfused flat path and stays bitwise with it (pinned
+    in tests/test_kernels.py).
+
+    Dispatch follows ``ota_aggregate_pytree`` exactly: TPU → Pallas kernel;
+    CPU → the pure-jnp flattened oracle ``ref.ota_round_step_ref``
+    (interpret mode only when ``use_kernel=True`` is forced, as the
+    equivalence tests do).
+    """
+    from repro.kernels import ref
+
+    g_leaves, _ = jax.tree.flatten(stacked)
+    p_leaves, p_def = jax.tree.flatten(params)
+    if len(g_leaves) != len(p_leaves):
+        raise ValueError("gradient and parameter pytrees do not match")
+    sizes = [int(np.prod(l.shape[1:])) for l in g_leaves]
+    dtype = jnp.result_type(*[l.dtype for l in g_leaves])
+    n = g_leaves[0].shape[0]
+    g = jnp.concatenate([l.reshape(n, -1).astype(dtype) for l in g_leaves],
+                        axis=1)
+    keys = jax.random.split(key, len(g_leaves))
+    z = jnp.concatenate([jax.random.normal(k, (sz,))
+                         for k, sz in zip(keys, sizes)]).astype(dtype)
+    p_flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                              for l in p_leaves])
+    wire, q_scale = quantize_uplink(g, uplink_dtype)
+    ns = jnp.asarray(noise_scale, dtype)
+    eta32 = jnp.asarray(eta, jnp.float32)
+    if use_kernel is None:
+        use_kernel = not _on_cpu()
+    if use_kernel:
+        out = ota_round_step(wire, s, z, ns, p_flat, eta32, q_scale,
+                             block_d=block_d, interpret=interpret)
+    else:
+        out = ref.ota_round_step_ref(wire, s, z, ns, p_flat, eta32,
+                                     q_scale=q_scale)
+    offsets = np.cumsum([0] + sizes)
+    parts = [out[offsets[i]:offsets[i + 1]].reshape(np.shape(l)).astype(
+        l.dtype) for i, l in enumerate(p_leaves)]
+    return jax.tree.unflatten(p_def, parts)
+
+
 def ota_aggregate_pytree(stacked: jax.Array, s: jax.Array, noise_scale,
-                         key: jax.Array, *, block_d: int = 64 * 1024,
+                         key: jax.Array, *, uplink_dtype: str = "f32",
+                         block_d: int = 64 * 1024,
                          use_kernel: Optional[bool] = None,
                          interpret: Optional[bool] = None):
     """Fused OTA aggregation over a whole gradient *pytree* in one launch.
@@ -77,6 +211,13 @@ def ota_aggregate_pytree(stacked: jax.Array, s: jax.Array, noise_scale,
     Leaf shapes need no alignment — the [N, D] matrix is lane-padded by
     ``ota_aggregate`` below.  Mixed leaf dtypes are accumulated in the
     widest input dtype and cast back per leaf on unflatten.
+
+    ``uplink_dtype`` simulates the quantized uplink on the unfused path:
+    the raveled gradients round-trip through ``quantize_uplink`` /
+    ``dequantize_uplink`` before aggregation (``"f32"`` is a literal
+    no-op — same array object, bitwise today's path).  The fused
+    ``ota_round_step_pytree`` applies the identical quantization, so the
+    fused and unfused paths see the same wire values for every dtype.
     """
     from repro.kernels import ref
 
@@ -86,6 +227,9 @@ def ota_aggregate_pytree(stacked: jax.Array, s: jax.Array, noise_scale,
     n = leaves[0].shape[0]
     g = jnp.concatenate([l.reshape(n, -1).astype(dtype) for l in leaves],
                         axis=1)
+    if uplink_dtype != "f32":
+        wire, q_scale = quantize_uplink(g, uplink_dtype)
+        g = dequantize_uplink(wire, q_scale).astype(dtype)
     keys = jax.random.split(key, len(leaves))
     z = jnp.concatenate([jax.random.normal(k, (sz,))
                          for k, sz in zip(keys, sizes)]).astype(dtype)

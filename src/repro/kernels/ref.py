@@ -23,6 +23,32 @@ def ota_aggregate_ref(g: jax.Array, s: jax.Array, z: jax.Array,
             * z.astype(jnp.float32)).astype(g.dtype)
 
 
+def ota_round_step_ref(g: jax.Array, s: jax.Array, z: jax.Array,
+                       noise_scale: jax.Array, params: jax.Array,
+                       eta: jax.Array,
+                       q_scale: Optional[jax.Array] = None) -> jax.Array:
+    """Fused OTA round step on flat arrays (g: [N, D] wire-dtype grads,
+    params: [D] f32):
+
+        ghat = sum_m qs_m g_m s_m + noise_scale * z
+        out  = params - eta * ghat
+
+    ``q_scale`` is the per-device symmetric dequantization scale of a
+    quantized uplink (None for f32/bf16 — the f32 cast dequantizes those).
+    Accumulates in f32 end-to-end and casts once on write, matching the
+    Pallas kernel.  With an f32 uplink the aggregation expression is
+    ``ota_aggregate_ref`` verbatim, which is what keeps the fused path
+    bitwise with the unfused flat path.
+    """
+    gf = g.astype(jnp.float32)
+    if q_scale is not None:
+        gf = gf * q_scale[:, None].astype(jnp.float32)
+    acc = jnp.sum(gf * s[:, None].astype(jnp.float32), axis=0)
+    ghat = acc + noise_scale.astype(jnp.float32) * z.astype(jnp.float32)
+    return (params.astype(jnp.float32)
+            - eta.astype(jnp.float32) * ghat).astype(params.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True,
                   window: Optional[int] = None) -> jax.Array:

@@ -472,6 +472,62 @@ def test_assert_no_recompile_sharded_chunk(world):
             chunk(*ops, length=1)
 
 
+def test_checkpoint_restored_operands_hit_warm_cache(world, tmp_path):
+    """The resumed-retrace soft spot, at the operand level: a carry
+    restored through ``checkpoint.restore_flat`` must be compile-cache-
+    indistinguishable from the live carry it was saved from.  Pre-fix,
+    restore returned raw npz ``np.ndarray`` leaves while the running chunk
+    produces ``jax.Array`` carries — identical avals, but jit keys the
+    container class, so the first resumed chunk call recompiled."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.fl.driver import _carry_tree
+
+    body, ops = _fleet_chunk_operands(world)
+    chunk = VmapPlacement().build_chunk(body, adaptive=False)
+    stacked, etas, params_b, _, keys_b, data = ops
+    params_b, _, keys_b, _ = chunk(*ops, length=2)       # live carry
+    live = (stacked, etas, params_b, None, keys_b, data)
+    chunk(*live, length=2)                               # warm (live form)
+    path = os.path.join(tmp_path, "carry")
+    ckpt.save(path, _carry_tree(stacked, params_b, None, keys_b), meta={})
+    state = ckpt.restore_flat(ckpt.load_flat(path),
+                              _carry_tree(stacked, params_b, None, keys_b))
+    restored = (state["scheme"], etas, state["carry"]["params"], None,
+                state["carry"]["keys"], data)
+    with telemetry.assert_no_recompile(chunk):
+        chunk(*restored, length=2)
+
+
+def test_resumed_adaptive_run_compiles_once_per_length(markov_world,
+                                                      tmp_path,
+                                                      monkeypatch):
+    """End-to-end pin of the ROADMAP soft spot: a RESUMED ``adaptive_sca``
+    run's second same-length chunk hits the compile cache — the chunk
+    compiles exactly one program per distinct chunk length, no retrace
+    between checkpoint-loaded and redesign-produced scheme leaves."""
+    dep, prm, fp, data, params0 = markov_world
+    pc = pcm.make_power_control("adaptive_sca", dep, prm)
+    run = FLRunConfig(eta=0.05, num_rounds=8, eval_every=2)
+    chunks = []
+    orig = VmapPlacement.build_chunk
+
+    def capture(self, *a, **kw):
+        c = orig(self, *a, **kw)
+        chunks.append(c)
+        return c
+
+    monkeypatch.setattr(VmapPlacement, "build_chunk", capture)
+    path = os.path.join(tmp_path, "fleet")
+    args = (mlp.mlp_loss, params0, [pc], dep.gains, data, run)
+    kw = dict(fading=fp, flat=False, seeds=(0,))
+    driver.run_fleet(*args, **kw, checkpoint_path=path, max_chunks=2)
+    driver.run_fleet(*args, **kw, checkpoint_path=path, resume=True)
+    # chunk_lengths(8, 2, True) = [1, 2, 2, 2, 1]; the resumed process
+    # executes [2, 2, 1] -> exactly two distinct lengths, two programs
+    resumed = chunks[-1]
+    assert resumed._cache_size() == 2
+
+
 def test_assert_no_recompile_rejects_uninstrumented():
     with pytest.raises(ValueError, match="compile cache"):
         with telemetry.assert_no_recompile(lambda: None):
