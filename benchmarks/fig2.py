@@ -674,6 +674,8 @@ def write_bench_summary(task="paper_mlp") -> dict:
         }
     if "population" in report:
         summary["population"] = report["population"]
+    if "scenario_grid" in report:
+        summary["scenario_grid"] = report["scenario_grid"]
     if "round_step" in report:
         summary["round_step"] = report["round_step"]
     with open(BENCH_SUMMARY, "w") as f:
@@ -754,7 +756,26 @@ def main(argv=None) -> None:
                     help="0 = full batch (paper); default = the task's "
                          f"preferred size; under --bench, the minibatch "
                          f"mode size (default {BENCH_BATCH})")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="join a jax.distributed cluster before any "
+                         "backend touch (multi-process bring-up, "
+                         "DESIGN.md §Grid)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--local-devices", type=int, default=None,
+                    help="force N host-platform (CPU) devices per "
+                         "process (multi-process CPU smoke)")
     args = ap.parse_args(argv)
+    if args.coordinator:
+        if args.num_processes is None or args.process_id is None:
+            raise SystemExit("--coordinator needs --num-processes and "
+                             "--process-id")
+        from repro.distributed import initialize_multiprocess
+        nproc, ndev = initialize_multiprocess(
+            args.coordinator, args.num_processes, args.process_id,
+            local_device_count=args.local_devices)
+        print(f"process {args.process_id}/{nproc}: {ndev} local devices "
+              f"({jax.device_count()} global)", flush=True)
     try:
         task = _task(args.task)
     except (KeyError, ValueError) as e:

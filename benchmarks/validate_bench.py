@@ -22,6 +22,14 @@ present) must carry fused-vs-unfused walls for EVERY uplink dtype
 (f32/bf16/int8) in both its kernel rows and its fleet grid: a partial
 dtype sweep would silently read as "quantized uplink measured" when it
 wasn't.
+
+The ``scenario_grid`` section (when present) gets the same treatment:
+its sequential per-scenario walls must cover every scenario named in the
+config and sum back to ``sequential.total_s``, the headline
+``speedup.grid_vs_sequential`` must reconcile with the recorded walls it
+claims to summarize, and ``c1_slice_bitwise`` must be true — a grid
+whose C=1 slice is not bitwise today's per-scenario fleet is broken
+semantics, not a perf trade.
 """
 from __future__ import annotations
 
@@ -126,6 +134,44 @@ def _check_round_step(summary: dict, errors: list) -> None:
                           f"{sorted(missing)}")
 
 
+def _check_scenario_grid(summary: dict, errors: list) -> None:
+    """scenario_grid (when present) must reconcile with itself: one
+    sequential wall per configured scenario, walls that sum to their
+    total, a speedup that equals total/grid, and a bitwise C=1 slice."""
+    sg = summary.get("scenario_grid")
+    if not isinstance(sg, dict):
+        return
+    cfg = sg.get("config", {})
+    seq = sg.get("sequential", {})
+    rows = seq.get("per_scenario")
+    names = cfg.get("scenarios")
+    if isinstance(rows, list) and isinstance(names, list):
+        got = [r.get("scenario") for r in rows if isinstance(r, dict)]
+        if got != names:
+            errors.append(f"scenario_grid/sequential: per_scenario covers "
+                          f"{got} but config.scenarios is {names}")
+    total = seq.get("total_s")
+    if isinstance(rows, list) and isinstance(total, (int, float)):
+        walls = [r.get("wall_s", 0) for r in rows if isinstance(r, dict)]
+        tol = 0.01 + 5e-3 * len(walls)           # rounding headroom
+        if abs(sum(walls) - total) > tol:
+            errors.append(f"scenario_grid/sequential: walls sum to "
+                          f"{sum(walls):.2f}s but total_s is {total}s")
+    grid_wall = sg.get("grid", {}).get("wall_s")
+    speedup = sg.get("speedup", {}).get("grid_vs_sequential")
+    if isinstance(total, (int, float)) and isinstance(grid_wall,
+                                                      (int, float)) \
+            and isinstance(speedup, (int, float)) and grid_wall > 0:
+        if abs(speedup - total / grid_wall) > 0.05 * max(speedup, 1.0):
+            errors.append(f"scenario_grid/speedup: grid_vs_sequential "
+                          f"{speedup} != total_s/grid.wall_s "
+                          f"{total / grid_wall:.2f}")
+    if sg.get("c1_slice_bitwise") is not True:
+        errors.append("scenario_grid: c1_slice_bitwise must be true — "
+                      "the grid's C=1 slice diverged from the "
+                      "per-scenario fleet")
+
+
 def validate(summary_path: str = DEFAULT_SUMMARY,
              schema_path: str = SCHEMA) -> list:
     """Return a list of violation strings (empty = valid)."""
@@ -140,12 +186,14 @@ def validate(summary_path: str = DEFAULT_SUMMARY,
         _check(summary, schema, "", errors)
         _check_stage_chunks(summary, errors)
         _check_round_step(summary, errors)
+        _check_scenario_grid(summary, errors)
         return errors
     validator = jsonschema.Draft7Validator(schema)
     errors = [f"{'/'.join(str(p) for p in e.absolute_path) or '$'}: "
               f"{e.message}" for e in validator.iter_errors(summary)]
     _check_stage_chunks(summary, errors)
     _check_round_step(summary, errors)
+    _check_scenario_grid(summary, errors)
     return errors
 
 

@@ -306,6 +306,210 @@ class FadingProcess:
         return state, h
 
 
+# ---------------------------------------------------------------------------
+# Scenario stacks (DESIGN.md §Grid): C realized deployments as ONE pytree
+# whose leaves carry a leading [C] scenario axis, so a [C x K x S] fleet
+# runs as a single compiled program.  Family-heterogeneous stacks dispatch
+# per row through a lax.switch union — the same idiom power_control
+# .SchemeBatch uses for heterogeneous scheme stacks — with every branch
+# body the SAME ops a standalone FadingProcess would trace for that row's
+# static (family, dynamics), so each grid row reproduces the per-scenario
+# fleet bit-for-bit (pinned in tests/test_grid.py).
+# ---------------------------------------------------------------------------
+
+# per-row dispatch kinds: one per distinct FadingProcess trace shape
+_SK_IID_RAYLEIGH, _SK_IID_RICIAN, _SK_IID_NAKAGAMI = 0, 1, 2
+_SK_MARKOV = 3                       # rho > 0 (rayleigh/rician via K-factor)
+_SK_DROP_RAYLEIGH, _SK_DROP_RICIAN, _SK_DROP_NAKAGAMI = 4, 5, 6
+
+_FAMILY_INDEX = {"rayleigh": 0, "rician": 1, "nakagami": 2}
+
+
+@dataclasses.dataclass
+class ScenarioStack:
+    """C stacked deployments for the scenario-axis grid fleet.
+
+    Leaves carry a leading [C] axis (gains [C, N]; per-device fading
+    parameters [C, N]; dynamics scalars [C]); ``kind`` [C] selects each
+    row's ``lax.switch`` branch.  Rows with a family that doesn't use a
+    parameter hold benign fillers (K = 0, m = 1) chosen so the dead
+    branches stay finite under the vmapped select AND so the live branch's
+    arithmetic is bitwise the standalone FadingProcess's (x / (0 + 1.0)
+    and sqrt(x * 0) are exact in IEEE, so a Rayleigh row through the
+    Rician-shaped formulas reproduces the Rayleigh fast path bit-for-bit).
+
+    ``init``/``step`` are per-row methods (use under vmap with the stack
+    mapped at axis 0); ``gm_scale`` = sqrt(1 - rho^2) is precomputed
+    host-side in float64 exactly like FadingProcess's ``np.sqrt`` so the
+    Gauss-Markov update rounds identically.
+    """
+    names: tuple = ()
+    num_devices: int = 0
+    gains: Optional[jnp.ndarray] = None       # [C, N]
+    kind: Optional[jnp.ndarray] = None        # [C] int32
+    k_factor: Optional[jnp.ndarray] = None    # [C, N] (0 filler)
+    m: Optional[jnp.ndarray] = None           # [C, N] (1 filler)
+    rho: Optional[jnp.ndarray] = None         # [C]
+    gm_scale: Optional[jnp.ndarray] = None    # [C] sqrt(1 - rho^2)
+    p_dropout: Optional[jnp.ndarray] = None   # [C]
+
+    def __len__(self):
+        return len(self.names)
+
+    # -- per-row sampler (mirror FadingProcess bitwise) ------------------
+
+    def _drop(self, k_drop, h):
+        keep = jax.random.bernoulli(k_drop, 1.0 - self.p_dropout,
+                                    jnp.shape(h))
+        return jnp.where(keep, h, jnp.zeros_like(h))
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Stationary scattered-component draw for ONE row ([N] leaves)."""
+        return ota.draw_fading(key, self.gains / (self.k_factor + 1.0))
+
+    def step(self, state: jax.Array, key: jax.Array):
+        """One row's ``FadingProcess.step``, dispatched on ``kind``.
+
+        Each branch consumes ``key`` exactly like the standalone process
+        with that row's static config (i.i.d. rows draw from the key
+        directly; dynamic rows split it) — under vmap the switch becomes a
+        select over all branches, and the selected branch's values are the
+        standalone ops on the same operands, hence bitwise.
+        """
+        g, kf, m = self.gains, self.k_factor, self.m
+
+        def iid(draw):
+            return lambda op: (op[0], draw(op[1]))
+
+        def markov(op):
+            state, key = op
+            k_fade, k_drop = jax.random.split(key)
+            w = ota.draw_fading(k_fade, g / (kf + 1.0))
+            st = self.rho * state + self.gm_scale * w
+            los = jnp.sqrt(g * kf / (kf + 1.0))
+            h = jax.lax.complex(los + st.real, st.imag)
+            # p_dropout == 0 rows keep everything: bernoulli(k, 1.0) is
+            # all-true (uniform in [0, 1) < 1.0), bitwise the no-drop path
+            return st, self._drop(k_drop, h)
+
+        def drop_iid(draw):
+            def branch(op):
+                state, key = op
+                k_fade, k_drop = jax.random.split(key)
+                return state, self._drop(k_drop, draw(k_fade))
+            return branch
+
+        draw_ray = lambda k: ota.draw_fading(k, g)
+        draw_ric = lambda k: ota.draw_fading_rician(k, g, kf)
+        draw_nak = lambda k: ota.draw_fading_nakagami(k, g, m)
+        branches = (iid(draw_ray), iid(draw_ric), iid(draw_nak), markov,
+                    drop_iid(draw_ray), drop_iid(draw_ric),
+                    drop_iid(draw_nak))
+        return jax.lax.switch(self.kind, branches, (state, key))
+
+    # -- grid layout helpers ---------------------------------------------
+
+    def init_grid(self, keys: jax.Array) -> jax.Array:
+        """[C, S, N] initial states from per-seed keys [S, 2]: row c with
+        seed key s consumes the key exactly like scenario c's standalone
+        ``FadingProcess.init`` — the fleet/per-scenario bitwise anchor."""
+        return jax.vmap(lambda row: jax.vmap(row.init)(keys))(self)
+
+    def tile_over_schemes(self, k: int) -> "ScenarioStack":
+        """Repeat each scenario row k times -> leaves [C*k, ...], matching
+        the scenario-major flattened cell axis (cell c*k + j is scenario c,
+        scheme j).  Host-resident numpy, like ``tile_over_seeds``."""
+        return jax.tree.map(
+            lambda a: np.repeat(np.asarray(a), k, axis=0), self)
+
+    def row(self, c: int) -> "ScenarioStack":
+        """Length-1 stack holding scenario ``c`` (the C=1 slice)."""
+        sliced = jax.tree.map(lambda a: np.asarray(a)[c:c + 1], self)
+        sliced.names = (self.names[c],)
+        return sliced
+
+    def describe(self) -> str:
+        """Stable identity string for fleet checkpoints: a resume against a
+        different scenario axis (names, gains, families or dynamics) must
+        be rejected, not silently mixed."""
+        h = hashlib.sha1()
+        for leaf in (self.gains, self.kind, self.k_factor, self.m,
+                     self.rho, self.p_dropout):
+            a = np.ascontiguousarray(np.asarray(leaf))
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return (f"scenarios[{','.join(self.names)};n={self.num_devices};"
+                f"{h.hexdigest()[:12]}]")
+
+
+jax.tree_util.register_pytree_node(
+    ScenarioStack,
+    lambda st: (tuple(getattr(st, f) for f in
+                      ("gains", "kind", "k_factor", "m", "rho", "gm_scale",
+                       "p_dropout")),
+                (st.names, st.num_devices)),
+    lambda aux, ch: ScenarioStack(*aux, *ch),
+)
+
+
+def stack_deployments(deps, dynamics=None, names=None) -> ScenarioStack:
+    """Stack C realized Deployments (+ per-scenario DynamicsSpec) into one
+    :class:`ScenarioStack` — the stacked-deployment builder behind
+    ``stack_scenarios``.  All deployments must agree on the device count
+    (the grid shares one task partition)."""
+    deps = list(deps)
+    if not deps:
+        raise ValueError("stack_deployments needs at least one deployment")
+    c = len(deps)
+    dyns = list(dynamics) if dynamics is not None else [DynamicsSpec()] * c
+    if len(dyns) != c:
+        raise ValueError(f"{c} deployments but {len(dyns)} dynamics specs")
+    names = tuple(names) if names is not None \
+        else tuple(f"scenario{i}" for i in range(c))
+    if len(names) != c:
+        raise ValueError(f"{c} deployments but {len(names)} names")
+    n = deps[0].num_devices
+    if any(d.num_devices != n for d in deps):
+        raise ValueError("deployments disagree on device count")
+
+    gains = np.stack([np.asarray(d.gains, np.float64) for d in deps])
+    kind = np.zeros(c, np.int32)
+    k_factor = np.zeros((c, n), np.float64)
+    m = np.ones((c, n), np.float64)
+    rho = np.zeros(c, np.float64)
+    p_drop = np.zeros(c, np.float64)
+    for i, (dep, dyn) in enumerate(zip(deps, dyns)):
+        spec = dep.fading_spec
+        if spec.family == "nakagami" and dyn.rho > 0:
+            raise ValueError("Gauss-Markov dynamics unsupported for nakagami")
+        if spec.family == "rician":
+            k_factor[i] = np.broadcast_to(
+                np.asarray(spec.rician_k, np.float64), (n,))
+        if spec.family == "nakagami":
+            m[i] = np.broadcast_to(
+                np.asarray(spec.nakagami_m, np.float64), (n,))
+        rho[i], p_drop[i] = dyn.rho, dyn.p_dropout
+        if dyn.rho > 0:
+            kind[i] = _SK_MARKOV
+        elif dyn.p_dropout > 0:
+            kind[i] = _SK_DROP_RAYLEIGH + _FAMILY_INDEX[spec.family]
+        else:
+            kind[i] = _FAMILY_INDEX[spec.family]
+    return ScenarioStack(names=names, num_devices=n, gains=gains, kind=kind,
+                         k_factor=k_factor, m=m, rho=rho,
+                         gm_scale=np.sqrt(1.0 - rho**2), p_dropout=p_drop)
+
+
+def stack_scenarios(scenarios, seed: Optional[int] = None) -> ScenarioStack:
+    """Realize + stack scenarios (names or Scenario objects) for the grid
+    fleet: ``run_fleet(..., scenarios=stack_scenarios(SWEEP_FAMILIES))``
+    runs every (scenario, scheme, seed) cell as one compiled program."""
+    scs = [get_scenario(s) if isinstance(s, str) else s for s in scenarios]
+    deps = [realize(sc, seed=seed) for sc in scs]
+    return stack_deployments(deps, [sc.dynamics for sc in scs],
+                             names=[sc.name for sc in scs])
+
+
 def make_fading_process(dep: Deployment,
                         dynamics: Optional[DynamicsSpec] = None
                         ) -> FadingProcess:

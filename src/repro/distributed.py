@@ -14,6 +14,7 @@ substrate of the fleet placement layer (fl.placement, DESIGN.md
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 from typing import Optional
 
@@ -166,3 +167,78 @@ def shard_vmap(fn, mesh: Mesh, axes=("data", "model"), num_sharded: int = 1):
         return out
 
     return call
+
+
+# ---------------------------------------------------------------------------
+# Multi-process bring-up (DESIGN.md §Grid).
+#
+# ``jax.distributed.initialize`` wires P processes to one coordinator:
+# after it, every process sees the GLOBAL device set and shares the
+# coordination service's key-value store.  On the CPU backend, however,
+# one XLA computation cannot span processes (XLA raises "Multiprocess
+# computations aren't implemented on the CPU backend"), so the bring-up
+# rule for grids is PROCESS-SLICED execution: each process runs a
+# contiguous slice of the flattened cell axis on a mesh of its LOCAL
+# devices, and cross-process agreement is verified by exchanging result
+# digests through ``kv_put``/``kv_get`` (benchmarks/grid_smoke.py is the
+# 2-process forced-CPU proof).  On accelerator backends the same
+# initialize call is the prerequisite for true global-array meshes.
+# ---------------------------------------------------------------------------
+
+
+def initialize_multiprocess(coordinator_address: str, num_processes: int,
+                            process_id: int,
+                            local_device_count: Optional[int] = None):
+    """Join this process to a ``jax.distributed`` cluster.
+
+    Must run before any jax computation touches the backend.
+    ``local_device_count`` forces N host-platform (CPU) devices per
+    process via XLA_FLAGS — the CI smoke path; leave None on real
+    accelerators.  Returns (process_count, local_device_count) as jax
+    sees them after initialization.
+    """
+    if local_device_count:
+        flags = os.environ.get("XLA_FLAGS", "")
+        forced = f"--xla_force_host_platform_device_count={local_device_count}"
+        if forced not in flags:
+            os.environ["XLA_FLAGS"] = f"{flags} {forced}".strip()
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return jax.process_count(), jax.local_device_count()
+
+
+def process_grid_slice(g: int, process_id: Optional[int] = None,
+                       num_processes: Optional[int] = None) -> slice:
+    """This process's contiguous slice of a flattened grid axis of size
+    ``g``: rows [i*ceil(g/P), min((i+1)*ceil(g/P), g)).  Process-major and
+    deterministic, so P processes partition the axis exactly; defaults
+    come from the initialized jax.distributed runtime."""
+    p = jax.process_count() if num_processes is None else int(num_processes)
+    i = jax.process_index() if process_id is None else int(process_id)
+    if not 0 <= i < p:
+        raise ValueError(f"process {i} outside [0, {p})")
+    per = -(-g // p)
+    return slice(min(i * per, g), min((i + 1) * per, g))
+
+
+def _coordination_client():
+    from jax._src import distributed as _dist  # no public KV API yet
+    client = getattr(_dist.global_state, "client", None)
+    if client is None:
+        raise RuntimeError("jax.distributed is not initialized; call "
+                           "initialize_multiprocess first")
+    return client
+
+
+def kv_put(key: str, value: str) -> None:
+    """Publish a string under ``key`` in the coordination service's
+    key-value store (visible to every process in the cluster)."""
+    _coordination_client().key_value_set(key, value)
+
+
+def kv_get(key: str, timeout_s: float = 60.0) -> str:
+    """Block until some process publishes ``key``; returns its value."""
+    value = _coordination_client().blocking_key_value_get(
+        key, int(timeout_s * 1000))
+    return value.decode() if isinstance(value, bytes) else value

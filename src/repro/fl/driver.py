@@ -94,7 +94,8 @@ def _fading_desc(fading) -> str:
 
 def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
                     fading, population=None, cohort_size=None,
-                    cohort_rounds=None, uplink_dtype="f32") -> dict:
+                    cohort_rounds=None, uplink_dtype="f32",
+                    scenarios=None) -> dict:
     """Everything that must match for a resumed run to be bit-identical
     to the uninterrupted one: the grid, the full run config (dynamics:
     eta/batch_size/gmax/clipping), the per-scheme etas, the aggregation
@@ -106,7 +107,15 @@ def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
     math, so resuming across stream modes is legal — as is ``fuse_round``
     (fused and unfused round tails agree bitwise for f32 and share the
     wire values for quantized uplinks).  ``uplink_dtype`` IS identity:
-    quantization changes every trajectory."""
+    quantization changes every trajectory.
+
+    ``scenarios`` (a ``core.scenarios.ScenarioStack``) joins the identity
+    twice: the scenario NAMES as a list (so telemetry/report can segment
+    the cell axis) and the full stack digest — gains, families, dynamics
+    parameters — via ``ScenarioStack.describe()``, so a thousand-cell grid
+    resume against a different scenario axis is rejected, not silently
+    mixed.  In scenario mode ``gains`` is None (the rows own their gains)
+    and the gains digest covers the stacked [C, N] matrix instead."""
     return {"uplink_dtype": str(uplink_dtype),
             "names": list(names), "seeds": list(seeds),
             "num_rounds": run.num_rounds, "eval_every": run.eval_every,
@@ -114,12 +123,18 @@ def _fleet_identity(names, seeds, run, etas, flat, placement, gains, data,
             "clip_to_gmax": bool(run.clip_to_gmax), "seed": run.seed,
             "etas": [float(e) for e in np.asarray(etas)],
             "flat": bool(flat), "placement": placement.describe(),
-            "gains": _array_digest(gains), "data": _array_digest(*data),
+            "gains": _array_digest(gains if gains is not None
+                                   else scenarios.gains),
+            "data": _array_digest(*data),
             "fading": _fading_desc(fading),
             "population": ("none" if population is None
                            else population.describe()),
             "cohort_size": int(cohort_size or 0),
-            "cohort_rounds": int(cohort_rounds or 0)}
+            "cohort_rounds": int(cohort_rounds or 0),
+            "scenarios": ("none" if scenarios is None
+                          else list(scenarios.names)),
+            "scenario_world": ("none" if scenarios is None
+                               else scenarios.describe())}
 
 
 def _save_fleet_state(path: str, chunks_done: int, t: int, stacked,
@@ -204,7 +219,8 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
               cohort_rounds: Optional[int] = None,
               stream: bool = True, telemetry=None,
               uplink_dtype: Optional[str] = None,
-              fuse_round: Optional[bool] = None) -> FLResult:
+              fuse_round: Optional[bool] = None,
+              scenarios=None) -> FLResult:
     """A [K-scheme x S-seed] experiment grid through a hardware placement.
 
     The grid/scheme/seed/eta semantics are ``engine.run_fleet``'s (which
@@ -264,6 +280,20 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                      checkpoint identity — with an f32 uplink the two are
                      bitwise-identical, and quantized uplinks share the
                      same wire values either way.
+    scenarios        a ``core.scenarios.ScenarioStack`` of C deployments:
+                     the fleet becomes the [C x K x S] grid of DESIGN.md
+                     §Grid, laid out as [C*K, S] cells with the scenario
+                     rows riding the cell axis.  ``schemes`` must then be
+                     the scenario-major flattened list (scenario c's K
+                     schemes at rows c*K..c*K+K-1 — every scenario gets
+                     its own power-control designs, solved against ITS
+                     gains), ``gains``/``fading`` must be None (each row
+                     owns its channel world), and cell (c, k, s) is
+                     bitwise the (k, s) cell of a plain fleet run on
+                     scenario c alone.  ``FLResult.names`` come back as
+                     "scenario/scheme"; the scenario axis joins the
+                     checkpoint identity.  Exclusive with population mode
+                     and adaptive (redesign_fn) schemes.
 
     Adaptive schemes (``power_control.AdaptiveSCA``) re-design BETWEEN
     chunks from the live fading state, whatever the placement: the state
@@ -295,6 +325,35 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
 
     redesign = getattr(stacked, "redesign_fn", None)
     pop_mode = population is not None
+    scen_mode = scenarios is not None
+    scen_b = None
+    if scen_mode:
+        c = len(scenarios)
+        if pop_mode:
+            raise ValueError("scenario grids and population mode are "
+                             "exclusive (a cohort would need per-scenario "
+                             "device worlds)")
+        if fading is not None:
+            raise ValueError("scenario grids own the channel process; "
+                             "pass fading=None")
+        if gains is not None:
+            raise ValueError("scenario grids own the gains; pass gains=None")
+        if redesign is not None:
+            raise ValueError("adaptive (redesign_fn) schemes are not "
+                             "supported on scenario grids")
+        if k % c:
+            raise ValueError(f"{k} stacked schemes don't tile over {c} "
+                             f"scenarios (need a multiple of {c})")
+        if scenarios.num_devices != _scheme_n(stacked):
+            raise ValueError(
+                f"scenario stack is a {scenarios.num_devices}-device world "
+                f"but the schemes are designed for {_scheme_n(stacked)}")
+        k_schemes = k // c
+        # cell axis is scenario-major: names scope to "scenario/scheme"
+        names = tuple(f"{sn}/{nm}" for sn, nm
+                      in zip(np.repeat(list(scenarios.names), k_schemes),
+                             names))
+        scen_b = scenarios.tile_over_schemes(k_schemes)   # [K, ...] rows
     n_cohort = cohort_cadence = None
     if pop_mode:
         n_cohort = int(cohort_size) if cohort_size else _scheme_n(stacked)
@@ -336,11 +395,13 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
 
     round_body = make_round_body(loss_fn, gains, run, fading=fading,
                                  flat=flat, cohort=pop_mode,
+                                 scenario=scen_mode,
                                  metrics_hook=metrics_hook,
                                  uplink_dtype=uplink_dtype,
                                  fuse_round=fuse_round)
     chunk = placement.build_chunk(round_body, adaptive or pop_adaptive,
-                                  cohort=pop_mode, tracer=tracer)
+                                  cohort=pop_mode, scenario=scen_mode,
+                                  tracer=tracer)
 
     data = tuple(jnp.asarray(a) for a in data)
     params_b = jax.tree.map(
@@ -350,7 +411,16 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     keys_b = jnp.tile(keys0[None], (k, 1, 1))                      # [K, S, 2]
     fading_state = None
     pop_table = None
-    if fading is not None and not pop_mode:
+    if scen_mode:
+        # each scenario row inits its own channel state from the SAME
+        # per-seed salted keys a standalone fleet on that scenario uses,
+        # then repeats over its schemes — cell (c, k, s) starts bitwise
+        # where scenario c's plain fleet does
+        init_keys = jax.vmap(
+            lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
+        state_cs = scenarios.init_grid(init_keys)                # [C, S, N]
+        fading_state = jnp.repeat(state_cs, k // len(scenarios), axis=0)
+    elif fading is not None and not pop_mode:
         init_keys = jax.vmap(
             lambda kk: jax.random.fold_in(kk, FADING_INIT_SALT))(keys0)
         state_s = fading.init_batch(init_keys)                     # [S, N]
@@ -429,7 +499,8 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
     if checkpoint_path is not None:
         identity = _fleet_identity(names, seeds, run, etas, flat, placement,
                                    gains, data, fading, population,
-                                   n_cohort, cohort_cadence, uplink_dtype)
+                                   n_cohort, cohort_cadence, uplink_dtype,
+                                   scenarios)
     start_chunk = 0
     if resuming:
         (start_chunk, t, stacked, params_b, fading_state, keys_b,
@@ -450,9 +521,12 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
         tracer.event("fleet_config", names=list(names), seeds=list(seeds),
                      num_rounds=int(run.num_rounds),
                      eval_every=int(run.eval_every),
-                     placement=placement.describe(), chunks=len(lengths),
+                     placement=placement.describe(cells=k * s_axis),
+                     chunks=len(lengths),
                      population=(int(population.size) if pop_mode else None),
                      cohort_size=n_cohort, cohort_rounds=cohort_cadence,
+                     scenarios=(list(scenarios.names) if scen_mode
+                                else None),
                      stream=bool(stream), start_chunk=start_chunk)
     last_tick = _tick_of(start_chunk - 1) \
         if pop_mode and start_chunk > 0 else None
@@ -537,6 +611,10 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                     params_b, fading_state, keys_b, metrics = chunk(
                         stacked, etas, params_b, fading_state, keys_b, data,
                         staged.cohort, length=length)
+                elif scen_mode:
+                    params_b, fading_state, keys_b, metrics = chunk(
+                        stacked, etas, params_b, fading_state, keys_b, data,
+                        scen_b, length=length)
                 else:
                     params_b, fading_state, keys_b, metrics = chunk(
                         stacked, etas, params_b, fading_state, keys_b, data,
@@ -606,7 +684,8 @@ def run_fleet(loss_fn: Callable, params: PyTree, schemes, gains: np.ndarray,
                     wall_compile=wall_compile, wall_exec=wall - wall_compile,
                     fading_state=fading_state, designs=designs,
                     wall_stage=wall_stage, cohorts=cohorts,
-                    stage_walls=stage_walls)
+                    stage_walls=stage_walls,
+                    scenario_names=(scenarios.names if scen_mode else None))
 
 
 def _scheme_names(schemes) -> list:

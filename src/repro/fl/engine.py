@@ -90,6 +90,9 @@ class FLResult:
                   for the chunks THIS invocation executed — the
                   streaming-lane profile benchmarks and telemetry consume
                   (None for full-participation runs)
+    scenario_names scenario axis of a [C x K x S] grid run, length C
+                  (None for single-scenario fleets); ``names`` is then the
+                  flattened scenario-major cell axis, length C*K
     """
     params: PyTree
     traces: dict
@@ -104,12 +107,14 @@ class FLResult:
     wall_stage: float = 0.0
     cohorts: Optional[list] = None
     stage_walls: Optional[list] = None
+    scenario_names: Optional[tuple] = None
 
 
 def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
                     fading=None, flat: bool = False,
                     sample_on_device: bool = True,
                     cohort: bool = False,
+                    scenario: bool = False,
                     metrics_hook: Optional[Callable] = None,
                     uplink_dtype: Optional[str] = None,
                     fuse_round: Optional[bool] = None) -> Callable:
@@ -138,6 +143,16 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
     reused across every cohort draw; the key stream is untouched, and a
     cohort equal to the full device set gathers identity — bitwise the
     non-cohort program's values.
+
+    With ``scenario=True`` the body instead takes a per-cell
+    ``core.scenarios.ScenarioStack`` row as its extra operand —
+    ``body(..., data, sc)`` — and both the channel draw and its state
+    update come from ``sc.step`` (gains live in the row, so ``gains`` may
+    be None and ``fading`` must be: the row IS the fading process).  A
+    [C x K x S] grid is then just a [C*K, S] fleet whose cells carry their
+    scenario row alongside their scheme row (DESIGN.md §Grid); each cell's
+    key split and update math are unchanged, so every cell is bitwise the
+    single-scenario fleet's.
 
     ``metrics_hook`` (DESIGN.md §Telemetry) extends the per-round metrics
     dict: called as ``hook(s=..., noise_scale=..., h=..., params=...)``
@@ -173,6 +188,12 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
     fuse = bool(flat) if fuse_round is None else bool(fuse_round)
     if fuse and not flat:
         raise ValueError("fuse_round=True requires flat=True")
+    if scenario and cohort:
+        raise ValueError("scenario grids and cohort sampling are exclusive "
+                         "(a cohort row would need per-scenario gathers)")
+    if scenario and fading is not None:
+        raise ValueError("scenario=True owns the channel process; "
+                         "pass fading=None")
 
     def device_grad(params, batch):
         g = jax.grad(loss_fn)(params, batch)
@@ -249,6 +270,16 @@ def make_round_body(loss_fn: Callable, gains: np.ndarray, run,
         return finish(scheme, eta, params, fading_state, k_ota, h, grads,
                       norms)
 
+    def scenario_body(scheme, eta, params, fading_state, key, data, sc):
+        k_fade, k_ota, k_batch = jax.random.split(key, 3)
+        batch = sample(data, k_batch)
+        grads, norms = jax.vmap(lambda b: device_grad(params, b))(batch)
+        fading_state, h = sc.step(fading_state, k_fade)
+        return finish(scheme, eta, params, fading_state, k_ota, h, grads,
+                      norms)
+
+    if scenario:
+        return scenario_body
     return cohort_body if cohort else body
 
 
@@ -280,21 +311,25 @@ def chunk_lengths(num_rounds: int, eval_every: int, with_eval: bool,
 
 
 def _scan_chunk(round_body, scheme, eta, params, fading_state, key, data,
-                length: int, cohort=None):
+                length: int, cohort=None, scenario=None):
     """``length`` rounds of ``round_body`` under lax.scan; returns stacked
     per-round metrics.  The main key is split once per round, exactly like
     the legacy host loop.  ``cohort`` (a cohort-body operand dict, see
-    ``make_round_body``) rides along as a scan constant — an operand of the
-    compiled chunk, so changing cohorts never recompiles."""
+    ``make_round_body``) and ``scenario`` (a ScenarioStack cell row) ride
+    along as scan constants — operands of the compiled chunk, so changing
+    cohorts or scenario parameters never recompiles."""
     def step(carry, _):
         params, fading_state, key = carry
         key, sub = jax.random.split(key)
-        if cohort is None:
-            params, fading_state, metrics = round_body(
-                scheme, eta, params, fading_state, sub, data)
-        else:
+        if cohort is not None:
             params, fading_state, metrics = round_body(
                 scheme, eta, params, fading_state, sub, data, cohort)
+        elif scenario is not None:
+            params, fading_state, metrics = round_body(
+                scheme, eta, params, fading_state, sub, data, scenario)
+        else:
+            params, fading_state, metrics = round_body(
+                scheme, eta, params, fading_state, sub, data)
         return (params, fading_state, key), metrics
 
     (params, fading_state, key), metrics = jax.lax.scan(

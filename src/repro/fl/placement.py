@@ -23,7 +23,8 @@ A placement exposes:
         layout the stacked schemes' design leaves for this placement
         (vmap broadcasts non-adaptive designs over seeds; sharding tiles
         every leaf to the full [K, S] grid so it can flatten to cells).
-    build_chunk(round_body, adaptive, cohort=False, tracer=None) -> chunk
+    build_chunk(round_body, adaptive, cohort=False, scenario=False,
+                tracer=None) -> chunk
         chunk(stacked, etas, params_b, fstate_b, keys_b, data, length)
         -> (params_b, fstate_b, keys_b, metrics), everything with leading
         [K, S] grid axes either way — the driver never knows where the
@@ -31,6 +32,11 @@ A placement exposes:
         before ``length`` — the staged cohort dict with [S, N] leaves
         (per-seed active sets, shared across schemes) — and the cell
         program is the engine's cohort body (DESIGN.md §Population).
+        With ``scenario=True`` the extra operand is instead a
+        ``ScenarioStack`` tiled to the cell axis (leaves [K, ...], one row
+        per cell) and the cell program is the engine's scenario body: the
+        [C x K x S] grid is just a [C*K, S] fleet whose cells carry their
+        channel world as an operand (DESIGN.md §Grid).
         Every chunk exposes ``_cache_size()`` — the number of compiled
         programs behind it (the jit trace cache here, the explicit
         per-(length, grid) dict on the sharded path) — which
@@ -38,6 +44,15 @@ A placement exposes:
         ``telemetry.Tracer``) emits a ``chunk_compile`` span whenever a
         call grows that cache; ``None`` (default) returns the exact
         pre-telemetry callable, bitwise.
+
+        The carry buffers (``params_b``/``fstate_b``/``keys_b``) are
+        DONATED to the compiled chunk (``jax.jit(...,
+        donate_argnums=(2, 3, 4))``): the chunk returns same-shaped
+        replacements, so XLA aliases them in place and a big grid never
+        holds two copies of every carry.  Callers must treat the passed-in
+        carries as consumed — the driver's linear chunk chain already
+        does.  ``donate=False`` on a placement restores the copying
+        behaviour (the RSS A/B probe in benchmarks/scenario_sweep.py).
     map_batch(fn, batch_tree) -> out_tree
         generic per-row map over a leading [B] batch axis — how
         ``solvers.solve_batch`` shards thousand-scenario SCA design
@@ -65,18 +80,31 @@ def _traced_compiles(chunk, tracer):
     ``chunk_compile`` span (the jit call traces + compiles synchronously;
     execution stays async, so the call duration on a cache-miss call IS
     the compile wall to within dispatch noise).  The wrapper changes no
-    operand, shape or key stream — only observation."""
+    operand, shape or key stream — only observation.
+
+    Chunks that pad the cell grid to the device count (the sharded
+    placement) expose ``_pad_frac()``; the span then carries
+    ``padded_frac`` — the fraction of compiled cells that are cell-0
+    masking waste — so a 1000-cell grid on 8·P devices reports what the
+    padding burns instead of hiding it in the exec wall."""
     def traced(*args, length):
         before = chunk._cache_size()
         t0 = time.monotonic()
         out = chunk(*args, length=length)
         after = chunk._cache_size()
         if after > before:
+            extra = {}
+            pad = getattr(chunk, "_pad_frac", None)
+            frac = pad() if pad is not None else None
+            if frac is not None:
+                extra["padded_frac"] = round(frac, 6)
             tracer.event("chunk_compile", dur=round(time.monotonic() - t0, 6),
-                         length=int(length), cache_size=after)
+                         length=int(length), cache_size=after, **extra)
         return out
 
     traced._cache_size = chunk._cache_size
+    if hasattr(chunk, "_pad_frac"):
+        traced._pad_frac = chunk._pad_frac
     return traced
 
 
@@ -87,7 +115,7 @@ class Placement:
         raise NotImplementedError
 
     def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
-                    tracer=None):
+                    scenario: bool = False, tracer=None):
         raise NotImplementedError
 
     def compile_batch(self, fn):
@@ -100,10 +128,13 @@ class Placement:
     def map_batch(self, fn, batch_tree):
         return self.compile_batch(fn)(batch_tree)
 
-    def describe(self) -> str:
+    def describe(self, cells=None) -> str:
         """Stable identity string, recorded in fleet checkpoints so a
         resume on a different placement is rejected (the bitwise-resume
-        contract holds per placement)."""
+        contract holds per placement).  ``cells`` (the flattened grid
+        size, when the caller knows it) lets padding placements report
+        their cell-0 waste in the string; placements that never pad
+        ignore it."""
         raise NotImplementedError
 
 
@@ -114,8 +145,13 @@ class VmapPlacement(Placement):
     This is byte-for-byte the fleet program ``engine.run_fleet`` has
     always compiled — non-adaptive schemes broadcast over the seed axis
     (in_axes None), adaptive schemes tile per cell — so the refactor keeps
-    the default path run-for-run identical.
+    the default path run-for-run identical.  ``donate=False`` disables
+    carry-buffer donation (see module docstring).
     """
+    donate: bool = True
+
+    def _donate(self):
+        return (2, 3, 4) if self.donate else ()
 
     def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
         # every (scheme, seed) cell owns its design: tile the design state
@@ -123,7 +159,30 @@ class VmapPlacement(Placement):
         return tile_over_seeds(stacked, s_axis) if adaptive else stacked
 
     def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
-                    tracer=None):
+                    scenario: bool = False, tracer=None):
+        if cohort and scenario:
+            raise ValueError("cohort and scenario chunks are exclusive")
+        if scenario:
+            # scenario rows ride the cell axis next to the scheme rows:
+            # mapped per cell, broadcast over seeds (every seed of a cell
+            # lives in the same channel world)
+            def scenario_chunk(stacked, etas, params_b, fstate_b, keys_b,
+                               data, scen_b, length):
+                def cell(scheme, eta, params, fstate, key, sc):
+                    return _scan_chunk(round_body, scheme, eta, params,
+                                       fstate, key, data, length,
+                                       scenario=sc)
+                per_seed = jax.vmap(cell, in_axes=(0 if adaptive else None,
+                                                   None, 0, 0, 0, None))
+                per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0, 0))
+                return per_cell(stacked, etas, params_b, fstate_b, keys_b,
+                                scen_b)
+
+            chunk = jax.jit(scenario_chunk, static_argnames=("length",),
+                            donate_argnums=self._donate())
+            return chunk if tracer is None \
+                else _traced_compiles(chunk, tracer)
+
         if not cohort:
             def fleet_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
                             length):
@@ -135,7 +194,8 @@ class VmapPlacement(Placement):
                 per_cell = jax.vmap(per_seed, in_axes=(0, 0, 0, 0, 0))
                 return per_cell(stacked, etas, params_b, fstate_b, keys_b)
 
-            chunk = jax.jit(fleet_chunk, static_argnames=("length",))
+            chunk = jax.jit(fleet_chunk, static_argnames=("length",),
+                            donate_argnums=self._donate())
             return chunk if tracer is None \
                 else _traced_compiles(chunk, tracer)
 
@@ -152,13 +212,14 @@ class VmapPlacement(Placement):
             return per_cell(stacked, etas, params_b, fstate_b, keys_b,
                             cohort_b)
 
-        chunk = jax.jit(cohort_chunk, static_argnames=("length",))
+        chunk = jax.jit(cohort_chunk, static_argnames=("length",),
+                        donate_argnums=self._donate())
         return chunk if tracer is None else _traced_compiles(chunk, tracer)
 
     def compile_batch(self, fn):
         return jax.jit(jax.vmap(fn))
 
-    def describe(self) -> str:
+    def describe(self, cells=None) -> str:
         return "vmap"
 
 
@@ -173,9 +234,12 @@ class ShardedPlacement(Placement):
     as cell slots.  Each device scans its local block of cells; results
     come back as global arrays with the grid axes restored, so the host
     driver (and its checkpoint format) is identical to the vmap path.
+    ``donate=False`` disables carry-buffer donation (see module
+    docstring).
     """
     mesh: Any
     axes: tuple = None  # default: every axis of ``mesh``
+    donate: bool = True
 
     def __post_init__(self):
         if self.axes is None:
@@ -185,40 +249,69 @@ class ShardedPlacement(Placement):
     def num_devices(self) -> int:
         return distributed.grid_devices(self.mesh, self.axes)
 
+    def _donate(self):
+        return (2, 3, 4) if self.donate else ()
+
+    def _pad(self, cells: int):
+        """(padded grid size, padded-cell fraction) for a flattened grid
+        of ``cells`` rows — the cell-0 copies shard_vmap adds so the grid
+        divides the device count."""
+        n = self.num_devices
+        gp = -(-cells // n) * n
+        return gp, (gp - cells) / gp
+
     def prepare_schemes(self, stacked, s_axis: int, adaptive: bool):
         # sharding flattens the grid to cells, so every design leaf must
         # carry the full [K, S] axes — adaptive or not
         return tile_over_seeds(stacked, s_axis)
 
     def build_chunk(self, round_body, adaptive: bool, cohort: bool = False,
-                    tracer=None):
+                    scenario: bool = False, tracer=None):
+        if cohort and scenario:
+            raise ValueError("cohort and scenario chunks are exclusive")
         compiled = {}
+        pad_info = {"frac": None}
+
+        def lookup(length, keys_b, compile_fn):
+            k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
+            pad_info["frac"] = self._pad(k * s)[1]
+            fn = compiled.get((length, k, s))
+            if fn is None:
+                fn = compiled[(length, k, s)] = compile_fn(
+                    round_body, length, k, s)
+            return fn
+
+        if scenario:
+            def scenario_chunk(stacked, etas, params_b, fstate_b, keys_b,
+                               data, scen_b, length):
+                fn = lookup(length, keys_b, self._compile_scenario)
+                return fn(stacked, etas, params_b, fstate_b, keys_b, data,
+                          scen_b)
+
+            scenario_chunk._cache_size = lambda: len(compiled)
+            scenario_chunk._pad_frac = lambda: pad_info["frac"]
+            return scenario_chunk if tracer is None \
+                else _traced_compiles(scenario_chunk, tracer)
 
         if not cohort:
             def chunk(stacked, etas, params_b, fstate_b, keys_b, data,
                       length):
-                k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
-                fn = compiled.get((length, k, s))
-                if fn is None:
-                    fn = compiled[(length, k, s)] = self._compile(
-                        round_body, length, k, s)
+                fn = lookup(length, keys_b, self._compile)
                 return fn(stacked, etas, params_b, fstate_b, keys_b, data)
 
             chunk._cache_size = lambda: len(compiled)
+            chunk._pad_frac = lambda: pad_info["frac"]
             return chunk if tracer is None \
                 else _traced_compiles(chunk, tracer)
 
         def cohort_chunk(stacked, etas, params_b, fstate_b, keys_b, data,
                          cohort_b, length):
-            k, s = int(keys_b.shape[0]), int(keys_b.shape[1])
-            fn = compiled.get((length, k, s))
-            if fn is None:
-                fn = compiled[(length, k, s)] = self._compile_cohort(
-                    round_body, length, k, s)
+            fn = lookup(length, keys_b, self._compile_cohort)
             return fn(stacked, etas, params_b, fstate_b, keys_b, data,
                       cohort_b)
 
         cohort_chunk._cache_size = lambda: len(compiled)
+        cohort_chunk._pad_frac = lambda: pad_info["frac"]
         return cohort_chunk if tracer is None \
             else _traced_compiles(cohort_chunk, tracer)
 
@@ -245,7 +338,40 @@ class ShardedPlacement(Placement):
                             flat(fstate_b), flat(keys_b), data)
             return unflat(out)
 
-        return jax.jit(run)
+        return jax.jit(run, donate_argnums=self._donate())
+
+    def _compile_scenario(self, round_body, length: int, k: int, s: int):
+        # scenario rows are per CELL ([K, ...] leaves, K = C*schemes): tile
+        # over the seed axis and flatten to the same [K*S] cell axis as the
+        # carry, so each cell ships its channel world through the mesh
+        def cell(scheme, eta, params, fstate, key, sc, data):
+            return _scan_chunk(round_body, scheme, eta, params, fstate, key,
+                               data, length, scenario=sc)
+
+        grid_call = distributed.shard_vmap(cell, self.mesh, self.axes,
+                                           num_sharded=6)
+
+        def run(stacked, etas, params_b, fstate_b, keys_b, data, scen_b):
+            def flat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k * s,) + a.shape[2:]), tree)
+
+            def unflat(tree):
+                return jax.tree.map(
+                    lambda a: jnp.reshape(a, (k, s) + a.shape[1:]), tree)
+
+            etas_f = jnp.reshape(
+                jnp.broadcast_to(jnp.asarray(etas)[:, None], (k, s)), (k * s,))
+            scen_f = jax.tree.map(
+                lambda a: jnp.reshape(
+                    jnp.broadcast_to(jnp.asarray(a)[:, None],
+                                     (k, s) + jnp.shape(a)[1:]),
+                    (k * s,) + jnp.shape(a)[1:]), scen_b)
+            out = grid_call(flat(stacked), etas_f, flat(params_b),
+                            flat(fstate_b), flat(keys_b), scen_f, data)
+            return unflat(out)
+
+        return jax.jit(run, donate_argnums=self._donate())
 
     def _compile_cohort(self, round_body, length: int, k: int, s: int):
         # the [S, N] cohort leaves tile across the scheme axis and flatten
@@ -279,11 +405,14 @@ class ShardedPlacement(Placement):
                             flat(fstate_b), flat(keys_b), cohort_f, data)
             return unflat(out)
 
-        return jax.jit(run)
+        return jax.jit(run, donate_argnums=self._donate())
 
     def compile_batch(self, fn):
         return jax.jit(distributed.shard_vmap(fn, self.mesh, self.axes))
 
-    def describe(self) -> str:
+    def describe(self, cells=None) -> str:
         shape = ",".join(f"{a}={self.mesh.shape[a]}" for a in self.axes)
-        return f"sharded[{shape}]"
+        if cells is None:
+            return f"sharded[{shape}]"
+        gp, _ = self._pad(int(cells))
+        return f"sharded[{shape},cells={int(cells)},pad={gp - int(cells)}/{gp}]"

@@ -61,6 +61,10 @@ def header(events) -> None:
               f"{len(cfg.get('seeds', []))} seeds, "
               f"{cfg.get('num_rounds')} rounds in {cfg.get('chunks')} chunks "
               f"on {cfg.get('placement')}")
+        if cfg.get("scenarios"):
+            print("scenarios".ljust(12),
+                  f"{len(cfg['scenarios'])} stacked: "
+                  + ", ".join(cfg["scenarios"]))
         if cfg.get("population"):
             print("population".ljust(12),
                   f"{cfg['population']} devices, cohort "
@@ -169,13 +173,31 @@ def bias_variance(npz_path: str, sample_rounds: int) -> None:
                                  dtype=int).tolist()))
     print(f"from {os.path.basename(npz_path)} "
           f"({t_axis} recorded rounds; mean over seeds)")
-    for ki, name in enumerate(names or range(next(iter(
-            bv.values())).shape[0])):
-        print(f"  scheme {name}")
+    names = list(names or range(next(iter(bv.values())).shape[0]))
+
+    def scheme_block(ki, label, indent="  "):
+        print(f"{indent}scheme {label}")
         for key in sorted(bv):
             series = bv[key][ki].mean(axis=0)          # [T] over seeds
             vals = " ".join(f"{series[t]:11.4e}" for t in pts)
-            print(f"    {key:<14} {vals}")
+            print(f"{indent}  {key:<14} {vals}")
+
+    # a scenario-grid run (DESIGN.md §Grid) carries the scenario axis in
+    # the checkpoint identity and scenario-major "scenario/scheme" cell
+    # names — segment the trajectory per scenario instead of one flat list
+    scens = meta.get("scenarios")
+    if isinstance(scens, (list, tuple)) and scens \
+            and len(names) % len(scens) == 0:
+        kb = len(names) // len(scens)
+        for ci, sc_name in enumerate(scens):
+            print(f"  scenario {sc_name}")
+            for ki in range(ci * kb, (ci + 1) * kb):
+                label = str(names[ki])
+                label = label.split("/", 1)[1] if "/" in label else label
+                scheme_block(ki, label, indent="    ")
+    else:
+        for ki, name in enumerate(names):
+            scheme_block(ki, name)
     print("    rounds        "
           + " ".join(f"{t:11d}" for t in pts))
     return flat

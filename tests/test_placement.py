@@ -439,7 +439,9 @@ def test_assert_no_recompile_vmap_chunk(world):
     stay on the two compiled programs; an unwarmed length inside the
     scope trips the assertion (the failure mode the audit exists for)."""
     body, ops = _fleet_chunk_operands(world)
-    chunk = VmapPlacement().build_chunk(body, adaptive=False)
+    # donate=False: this test re-feeds the SAME carry buffers, which the
+    # default donating chunk would consume (see placement module docstring)
+    chunk = VmapPlacement(donate=False).build_chunk(body, adaptive=False)
     chunk(*ops, length=2)
     chunk(*ops, length=1)                                  # warm both
     with telemetry.assert_no_recompile(chunk):
@@ -459,7 +461,7 @@ def test_assert_no_recompile_sharded_chunk(world):
     """The sharded chunk's explicit (length, k, s) program dict honours
     the same ``_cache_size`` audit contract as the jit path."""
     body, ops = _fleet_chunk_operands(world)
-    placement = ShardedPlacement(make_debug_mesh(2, 2))
+    placement = ShardedPlacement(make_debug_mesh(2, 2), donate=False)
     stacked = placement.prepare_schemes(ops[0], 1, adaptive=False)
     ops = (stacked,) + ops[1:]
     chunk = placement.build_chunk(body, adaptive=False)
@@ -483,7 +485,7 @@ def test_checkpoint_restored_operands_hit_warm_cache(world, tmp_path):
     from repro.fl.driver import _carry_tree
 
     body, ops = _fleet_chunk_operands(world)
-    chunk = VmapPlacement().build_chunk(body, adaptive=False)
+    chunk = VmapPlacement(donate=False).build_chunk(body, adaptive=False)
     stacked, etas, params_b, _, keys_b, data = ops
     params_b, _, keys_b, _ = chunk(*ops, length=2)       # live carry
     live = (stacked, etas, params_b, None, keys_b, data)

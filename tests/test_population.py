@@ -207,7 +207,9 @@ def test_cohort_chunks_do_not_recompile():
     params0 = init_params(mlp.mlp_defs(hidden=8), jax.random.PRNGKey(0))
     body = eng.make_round_body(mlp.mlp_loss, dep.gains, run, flat=False,
                                cohort=True)
-    chunk = VmapPlacement().build_chunk(body, adaptive=False, cohort=True)
+    # donate=False: the step closure re-feeds one carry across ticks
+    chunk = VmapPlacement(donate=False).build_chunk(body, adaptive=False,
+                                                    cohort=True)
 
     pop = _traffic_pop(size=100)
     params_b = jax.tree.map(
